@@ -1,0 +1,115 @@
+//! END-TO-END DRIVER: proves all three layers compose on a real
+//! workload.
+//!
+//! 1. L3 native path: generate realistic graphs (RMAT social-network
+//!    analogue + planted-partition web analogue), k-core order them, run
+//!    the full PKT parallel decomposition.
+//! 2. AOT path: load the `artifacts/*.hlo.txt` programs (lowered once
+//!    from the L2 JAX model, which calls the L1 Pallas kernel) via the
+//!    PJRT CPU client, and run the dense-block XLA decomposition of the
+//!    same graphs.
+//! 3. Assert the two paths agree **edge for edge**, then report
+//!    throughput for both (GWeps, the paper's rate), and exercise the
+//!    XLA support backend inside the PKT peel (support from XLA, peel
+//!    native) as a third composition.
+//!
+//! Requires `make artifacts` (the Makefile dependency chain does this).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example dense_block_xla
+//! ```
+
+use std::sync::atomic::AtomicI32;
+use trussx::gen;
+use trussx::graph::EdgeGraph;
+use trussx::metrics::{gweps, time};
+use trussx::order::{self, Ordering};
+use trussx::par::Pool;
+use trussx::runtime::{artifacts_dir, Runtime};
+use trussx::truss::{self, dense::DenseBackend};
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    println!("loading AOT artifacts from {}", dir.display());
+    let mut rt = Runtime::cpu()?;
+    let manifest = rt.load_manifest(&dir).map_err(|e| {
+        anyhow::anyhow!("{e:#}\nhint: run `make artifacts` first")
+    })?;
+    println!(
+        "PJRT platform = {}, programs = {:?}, dense blocks = {:?}",
+        rt.platform(),
+        {
+            let mut names = rt.names();
+            names.sort();
+            names
+        },
+        manifest.support_blocks()
+    );
+
+    let pool = Pool::with_default_threads();
+    let workloads = vec![
+        ("social (RMAT)", gen::rmat(256, 2200, 0.57, 0.19, 0.19, 99)),
+        ("web (planted 8x24)", gen::planted_partition(8, 24, 0.7, 0.01, 98)),
+        ("collab (WS)", gen::watts_strogatz(220, 5, 0.08, 97)),
+    ];
+
+    let mut all_agree = true;
+    for (name, g0) in workloads {
+        let (g, _) = order::reorder(&g0, Ordering::KCore);
+        let eg = EdgeGraph::new(g);
+        let wedges = eg.g.wedge_count();
+        println!("\n== workload: {name} (n={}, m={}, wedges={wedges}) ==", eg.n(), eg.m());
+
+        // --- L3 native PKT ---
+        let (res, pkt_secs) = time(|| truss::pkt(&eg, &pool));
+        println!(
+            "  native PKT   : {:.4}s  ({:.4} GWeps, t_max={})",
+            pkt_secs,
+            gweps(wedges, pkt_secs),
+            truss::max_trussness(&res.trussness)
+        );
+
+        // --- XLA dense path (L1 Pallas kernel inside the L2 model) ---
+        let backend = DenseBackend::for_graph(&rt, &manifest, eg.n())?;
+        let (xla_truss, xla_secs) = time(|| backend.decompose(&eg));
+        let xla_truss = xla_truss?;
+        println!(
+            "  XLA dense    : {:.4}s  ({:.4} GWeps, block={})",
+            xla_secs,
+            gweps(wedges, xla_secs),
+            backend.block
+        );
+
+        // --- composition 3: XLA support feeding the native PKT peel ---
+        let (xla_support, sup_secs) = time(|| backend.support(&eg));
+        let s: Vec<AtomicI32> = xla_support?
+            .into_iter()
+            .map(|x| AtomicI32::new(x as i32))
+            .collect();
+        let (hybrid, peel_secs) = time(|| truss::pkt_with_support(&eg, &pool, s));
+        println!(
+            "  hybrid       : {:.4}s  (XLA support {:.4}s + native peel {:.4}s)",
+            sup_secs + peel_secs,
+            sup_secs,
+            peel_secs
+        );
+
+        let agree_xla = xla_truss == res.trussness;
+        let agree_hybrid = hybrid.trussness == res.trussness;
+        println!(
+            "  agreement    : XLA=={} hybrid=={} over {} edges",
+            agree_xla,
+            agree_hybrid,
+            eg.m()
+        );
+        all_agree &= agree_xla && agree_hybrid;
+    }
+
+    println!();
+    if all_agree {
+        println!("END-TO-END OK: L1 Pallas kernel -> L2 JAX model -> AOT HLO -> L3 Rust runtime all agree with the native PKT decomposition.");
+        Ok(())
+    } else {
+        anyhow::bail!("layer disagreement detected");
+    }
+}

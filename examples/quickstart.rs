@@ -1,0 +1,51 @@
+//! Quickstart: generate a graph, run the PKT truss decomposition, and
+//! inspect the result.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use trussx::coordinator::{run_job, GraphSpec, JobConfig};
+use trussx::graph::EdgeGraph;
+use trussx::par::Pool;
+use trussx::truss;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The high-level pipeline: spec string → report.
+    let spec = GraphSpec::parse("rmat:n=4096,m=30000,seed=1")?;
+    let report = run_job(&JobConfig::new(spec))?;
+    println!("== pipeline API ==");
+    println!("{}", report.summary());
+    println!(
+        "phase breakdown: support {:.1}% | scan {:.1}% | process {:.1}%",
+        100.0 * report.stats.support_secs / report.stats.total_secs,
+        100.0 * report.stats.scan_secs / report.stats.total_secs,
+        100.0 * report.stats.process_secs / report.stats.total_secs,
+    );
+    println!("trussness histogram (k: edges):");
+    for (k, &c) in report.histogram.iter().enumerate() {
+        if c > 0 {
+            println!("  {k:>3}: {c}");
+        }
+    }
+
+    // 2. The low-level API: explicit graph → EdgeGraph → algorithm.
+    println!("\n== low-level API ==");
+    let g = trussx::gen::planted_partition(4, 16, 0.8, 0.01, 7);
+    let eg = EdgeGraph::new(g);
+    let pool = Pool::with_default_threads();
+    let res = truss::pkt(&eg, &pool);
+    let tmax = truss::max_trussness(&res.trussness);
+    println!(
+        "planted-partition 4x16: n={} m={} t_max={tmax}",
+        eg.n(),
+        eg.m()
+    );
+    // extract the maximal k-trusses at the deepest level
+    let trusses = truss::ktruss_components(&eg, &res.trussness, tmax);
+    println!("{}-trusses found: {}", tmax, trusses.len());
+    for (i, t) in trusses.iter().enumerate() {
+        println!("  truss {i}: {} edges", t.len());
+    }
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Serving example: run the truss-analytics server and drive it with
+//! concurrent clients, reporting request latency and throughput.
+//!
+//! ```bash
+//! cargo run --release --example truss_server
+//! ```
+
+use std::time::Instant;
+use trussx::coordinator::{serve, Client};
+
+fn main() -> anyhow::Result<()> {
+    let handle = serve("127.0.0.1:0")?;
+    let addr = handle.addr;
+    println!("server up on {addr}");
+
+    // a mixed request stream: decompositions of varying size + hists
+    let requests_per_client = 8;
+    let clients = 4;
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+                let mut lat = Vec::new();
+                let mut client = Client::connect(addr)?;
+                for r in 0..requests_per_client {
+                    let req = match r % 4 {
+                        0 => format!("DECOMP rmat:n=1024,m=6000,seed={c}{r} algo=pkt threads=1"),
+                        1 => format!("DECOMP er:n=800,p=0.01,seed={c}{r} algo=ros threads=1"),
+                        2 => format!(
+                            "HIST pp:blocks=4,size=14,pin=0.8,pout=0.01,seed={c}{r}"
+                        ),
+                        _ => format!("DECOMP ba:n=600,k=4,seed={c}{r} algo=local threads=1"),
+                    };
+                    let t = Instant::now();
+                    let reply = client.request(&req)?;
+                    anyhow::ensure!(reply.starts_with("OK "), "bad reply: {reply}");
+                    lat.push(t.elapsed().as_secs_f64());
+                }
+                Ok(lat)
+            })
+        })
+        .collect();
+
+    let mut latencies: Vec<f64> = Vec::new();
+    for w in workers {
+        latencies.extend(w.join().expect("client thread")?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total = latencies.len();
+    let pct = |p: f64| latencies[((total as f64 * p) as usize).min(total - 1)];
+    println!("\n== load test: {clients} concurrent clients x {requests_per_client} requests ==");
+    println!("requests     : {total}");
+    println!("wall time    : {wall:.3}s");
+    println!("throughput   : {:.1} req/s", total as f64 / wall);
+    println!("latency p50  : {:.4}s", pct(0.50));
+    println!("latency p90  : {:.4}s", pct(0.90));
+    println!("latency p99  : {:.4}s", pct(0.99));
+    println!("server jobs  : {}", handle.jobs_served());
+
+    assert_eq!(handle.jobs_served() as usize, total);
+    handle.shutdown();
+    println!("server shut down cleanly");
+    Ok(())
+}

@@ -1,0 +1,105 @@
+"""AOT lowering: jit the L2 models and dump HLO **text** artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example).
+
+Usage:  python -m compile.aot [--out-dir ../artifacts] [--blocks 64,128,256]
+
+Writes, per block size B:
+    support_B.hlo.txt   (A f32[B,B])            -> (S,)
+    peel_B.hlo.txt      (A f32[B,B], thresh f32) -> (A', S)
+    local_B.hlo.txt     (A f32[B,B], rho f32[B,B]) -> (rho',)
+plus manifest.txt mapping names to files (read by rust/src/runtime).
+Python runs ONCE at build time; the Rust binary is then self-contained.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DEFAULT_BLOCKS = (64, 128, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    Rust side unwraps a tuple regardless of output arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_support(block: int) -> str:
+    spec = jax.ShapeDtypeStruct((block, block), jnp.float32)
+    fn = functools.partial(model.support_model, block=block)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_peel(block: int) -> str:
+    spec = jax.ShapeDtypeStruct((block, block), jnp.float32)
+    thresh = jax.ShapeDtypeStruct((), jnp.float32)
+    fn = functools.partial(model.peel_model, block=block)
+    return to_hlo_text(jax.jit(fn).lower(spec, thresh))
+
+
+def lower_peelfix(block: int) -> str:
+    spec = jax.ShapeDtypeStruct((block, block), jnp.float32)
+    thresh = jax.ShapeDtypeStruct((), jnp.float32)
+    fn = functools.partial(model.peel_converge_model, block=block)
+    return to_hlo_text(jax.jit(fn).lower(spec, thresh))
+
+
+def lower_local(block: int) -> str:
+    spec = jax.ShapeDtypeStruct((block, block), jnp.float32)
+    # the 3-D compare/select in the local kernel is heavy at 256; cap
+    # its tile at 64 (see kernels/hindex.py docstring)
+    fn = functools.partial(model.local_model, block=min(block, 64))
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument(
+        "--blocks",
+        default=",".join(str(b) for b in DEFAULT_BLOCKS),
+        help="comma-separated dense block sizes",
+    )
+    args = ap.parse_args()
+    blocks = [int(b) for b in args.blocks.split(",") if b]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for b in blocks:
+        for name, lower in (
+            (f"support_{b}", lower_support),
+            (f"peel_{b}", lower_peel),
+            (f"peelfix_{b}", lower_peelfix),
+            (f"local_{b}", lower_local),
+        ):
+            text = lower(b)
+            fname = f"{name}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest.append((name, fname))
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("# trussx AOT artifact manifest: name<TAB>file\n")
+        for name, fname in manifest:
+            f.write(f"{name}\t{fname}\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')} ({len(manifest)} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""L1: Pallas kernels for the dense truss-support hot spot."""
+
+from .hindex import local_step
+from .support_matmul import support
+
+__all__ = ["support", "local_step"]

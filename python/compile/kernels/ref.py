@@ -1,0 +1,61 @@
+"""Pure-jnp / numpy oracles for the Pallas kernels and the L2 model.
+
+These are the correctness ground truth: simple, obviously-right
+formulations with no tiling, checked against the kernels by
+python/tests (pytest + hypothesis).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def support_ref(a):
+    """S = (A @ A) ⊙ A — dense edge support, no tiling."""
+    return (a @ a) * a
+
+
+def peel_ref(a, thresh):
+    """One peel step: drop edges with support < thresh."""
+    s = support_ref(a)
+    return a * (s >= thresh).astype(a.dtype)
+
+
+def local_step_ref(a, rho):
+    """Decrement local update (see kernels/hindex.py), dense reference.
+
+    cnt[u,v] = Σ_w a[u,w]·a[w,v]·[ρ[u,w] ≥ ρ[u,v]]·[ρ[w,v] ≥ ρ[u,v]]
+    ρ'[u,v]  = ρ[u,v] if cnt ≥ ρ[u,v] else max(ρ[u,v]−1, 0), masked to A.
+    """
+    a = jnp.asarray(a)
+    rho = jnp.asarray(rho)
+    ge_uw = (rho[:, :, None] >= rho[:, None, :]).astype(a.dtype)  # [u, w, v]
+    ge_wv = (rho[None, :, :] >= rho[:, None, :]).astype(a.dtype)  # [u, w, v]
+    term = a[:, :, None] * ge_uw * a[None, :, :] * ge_wv
+    cnt = jnp.sum(term, axis=1)
+    dec = jnp.maximum(rho - 1.0, 0.0)
+    return jnp.where(cnt >= rho, rho, dec) * a
+
+
+def truss_decompose_ref(adj):
+    """Reference dense truss decomposition by repeated peeling (numpy).
+
+    ``adj``: symmetric 0/1 numpy array, zero diagonal. Returns an int
+    matrix T where T[u, v] = trussness of edge <u, v> (0 on non-edges).
+    """
+    a = np.array(adj, dtype=np.float64)
+    n = a.shape[0]
+    truss = np.zeros((n, n), dtype=np.int64)
+    truss[a > 0] = 2
+    k = 2
+    while a.sum() > 0:
+        while True:
+            s = (a @ a) * a
+            drop = (a > 0) & (s < k - 1)
+            if not drop.any():
+                break
+            truss[drop] = k
+            a[drop] = 0.0
+        k += 1
+        if k > n + 2:  # safety valve; trussness is bounded by n
+            break
+    return truss

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: dense edge-support via tiled masked matmul.
+
+The Graphulo-style linear-algebra formulation of truss support (paper
+ref [20]): for a dense 0/1 adjacency matrix ``A``, the per-edge triangle
+count is ``S = (A @ A) * A`` — entry (u, v) counts common neighbors of u
+and v, masked to actual edges.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the contraction ``A @ A``
+targets the MXU; the grid iterates (i, j) output tiles with an inner k
+dimension accumulating into the resident output tile (its BlockSpec
+index map ignores k, so the tile stays in VMEM across the k loop); the
+elementwise ``⊙ A`` mask fuses into the epilogue of the last k step.
+Tiles are ``(BT, BT)`` f32 blocks sized for VMEM (default 128 → 64 KiB
+per tile, 4 tiles resident ≈ 256 KiB ≪ 16 MiB).
+
+Everything here runs with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode lowers to plain HLO that
+the Rust runtime loads (see python/compile/aot.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _support_kernel(a_ik_ref, a_kj_ref, mask_ref, out_ref, *, n_k: int):
+    """One (i, j, k) grid step: out += A[i,k] @ A[k,j]; mask on last k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(
+        a_ik_ref[...], a_kj_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        # fuse the ⊙A mask into the final k step
+        out_ref[...] = out_ref[...] * mask_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def support(a, block: int = 128):
+    """Dense edge support ``S = (A @ A) * A`` as a Pallas tiled kernel.
+
+    ``a``: f32[n, n] symmetric 0/1 adjacency with zero diagonal; n must
+    be divisible by ``block`` (pad upstream). Returns f32[n, n] with
+    S[u, v] = number of triangles containing edge <u, v>.
+    """
+    n = a.shape[0]
+    assert a.shape == (n, n), "adjacency must be square"
+    bt = min(block, n)
+    assert n % bt == 0, f"n={n} not divisible by block={bt}"
+    n_b = n // bt
+    grid = (n_b, n_b, n_b)
+    return pl.pallas_call(
+        functools.partial(_support_kernel, n_k=n_b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bt), lambda i, j, k: (i, k)),  # A[i, k]
+            pl.BlockSpec((bt, bt), lambda i, j, k: (k, j)),  # A[k, j]
+            pl.BlockSpec((bt, bt), lambda i, j, k: (i, j)),  # mask A[i, j]
+        ],
+        out_specs=pl.BlockSpec((bt, bt), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(a, a, a)
+
+
+def vmem_bytes(block: int) -> int:
+    """Estimated VMEM footprint of one grid step (3 input tiles + the
+    resident output tile, f32). Used by DESIGN.md §Perf for the TPU
+    estimate — must stay well under ~16 MiB."""
+    return 4 * block * block * 4
+
+
+def mxu_utilization_estimate(block: int) -> float:
+    """Fraction of MXU peak the kernel's matmuls can reach, estimated as
+    the ratio of tile matmul FLOPs to total tile FLOPs (matmul plus the
+    mask epilogue), scaled by MXU geometry fit (the 128×128 systolic
+    array is fully occupied when block is a multiple of 128)."""
+    matmul_flops = 2 * block**3
+    epilogue_flops = 2 * block**2  # mask multiply + store
+    geometry = 1.0 if block % 128 == 0 else block / ((block // 128 + 1) * 128)
+    return geometry * matmul_flops / (matmul_flops + epilogue_flops)

@@ -1,0 +1,74 @@
+"""AOT pipeline tests: lowering produces loadable HLO text with the
+expected entry computation and parameter shapes."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+
+class TestLowering:
+    @pytest.mark.parametrize("block", [16, 64])
+    def test_support_lowers_to_hlo_text(self, block):
+        text = aot.lower_support(block)
+        assert "HloModule" in text
+        assert f"f32[{block},{block}]" in text
+
+    def test_peel_has_two_params(self, block=16):
+        text = aot.lower_peel(block)
+        assert "HloModule" in text
+        # scalar threshold parameter present
+        assert "f32[]" in text
+
+    def test_local_lowers(self, block=16):
+        text = aot.lower_local(block)
+        assert "HloModule" in text
+
+    def test_hlo_is_plain_ops_no_custom_call(self):
+        # interpret=True must lower to plain HLO the CPU client can run —
+        # a Mosaic custom-call would be unloadable (see DESIGN.md)
+        for text in (aot.lower_support(16), aot.lower_local(16)):
+            assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+
+    def test_text_not_proto(self):
+        # HLO text is ASCII and starts with the module header — guards
+        # against accidentally switching to .serialize() (64-bit-id protos
+        # that xla_extension 0.5.1 rejects)
+        text = aot.lower_support(16)
+        assert text.lstrip().startswith("HloModule")
+        assert text.isascii()
+
+
+class TestCliEndToEnd:
+    def test_writes_artifacts_and_manifest(self, tmp_path):
+        out = tmp_path / "artifacts"
+        env = dict(os.environ)
+        proc = subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--blocks", "16"],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            env=env,
+            capture_output=True,
+            text=True,
+            timeout=600,
+        )
+        assert proc.returncode == 0, proc.stderr
+        names = sorted(p.name for p in out.iterdir())
+        assert names == [
+            "local_16.hlo.txt",
+            "manifest.txt",
+            "peel_16.hlo.txt",
+            "peelfix_16.hlo.txt",
+            "support_16.hlo.txt",
+        ]
+        manifest = (out / "manifest.txt").read_text()
+        assert "support_16\tsupport_16.hlo.txt" in manifest
+
+
+class TestPeelfixLowering:
+    def test_peelfix_lowers_with_while_loop(self):
+        text = aot.lower_peelfix(16)
+        assert "HloModule" in text
+        assert "while" in text.lower(), "in-device fixpoint must lower to an HLO while loop"

@@ -1,0 +1,175 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, densities and block sizes; every case asserts
+exact agreement (the kernels are integer-valued float math, so
+assert_allclose with zero tolerance is appropriate).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import local_step, support
+from compile.kernels.ref import local_step_ref, peel_ref, support_ref
+from compile.kernels.support_matmul import mxu_utilization_estimate, vmem_bytes
+
+
+def random_adjacency(n: int, density: float, seed: int) -> np.ndarray:
+    rng = np.random.RandomState(seed)
+    upper = rng.rand(n, n) < density
+    a = np.triu(upper, 1)
+    a = (a | a.T).astype(np.float32)
+    return a
+
+
+# ---------------------------------------------------------------- support
+
+
+class TestSupportKernel:
+    @pytest.mark.parametrize("n,block", [(16, 16), (32, 16), (64, 64), (128, 64), (128, 128)])
+    def test_matches_ref_shapes(self, n, block):
+        a = random_adjacency(n, 0.3, seed=n + block)
+        got = np.asarray(support(a, block=block))
+        want = np.asarray(support_ref(a))
+        np.testing.assert_allclose(got, want, atol=0)
+
+    def test_complete_graph(self):
+        n = 32
+        a = (np.ones((n, n)) - np.eye(n)).astype(np.float32)
+        s = np.asarray(support(a, block=16))
+        # every edge of K_n is in n-2 triangles
+        off = ~np.eye(n, dtype=bool)
+        assert (s[off] == n - 2).all()
+        assert (np.diagonal(s) == 0).all()
+
+    def test_triangle_free(self):
+        # ring graph: no triangles
+        n = 32
+        a = np.zeros((n, n), dtype=np.float32)
+        for i in range(n):
+            a[i, (i + 1) % n] = a[(i + 1) % n, i] = 1
+        s = np.asarray(support(a, block=16))
+        assert (s == 0).all()
+
+    def test_empty(self):
+        a = np.zeros((64, 64), dtype=np.float32)
+        assert (np.asarray(support(a, block=64)) == 0).all()
+
+    def test_symmetry_preserved(self):
+        a = random_adjacency(64, 0.4, seed=7)
+        s = np.asarray(support(a, block=32))
+        np.testing.assert_allclose(s, s.T, atol=0)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n_blocks=st.integers(1, 3),
+        block=st.sampled_from([8, 16, 32]),
+        density=st.floats(0.0, 0.8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, n_blocks, block, density, seed):
+        n = n_blocks * block
+        a = random_adjacency(n, density, seed)
+        got = np.asarray(support(a, block=block))
+        want = np.asarray(support_ref(a))
+        np.testing.assert_allclose(got, want, atol=0)
+
+    def test_rejects_non_divisible(self):
+        a = random_adjacency(24, 0.3, seed=1)
+        with pytest.raises(AssertionError):
+            support(a, block=16)
+
+
+# ---------------------------------------------------------------- local step
+
+
+class TestLocalStepKernel:
+    @pytest.mark.parametrize("n,block", [(16, 16), (32, 16), (64, 32)])
+    def test_matches_ref(self, n, block):
+        a = random_adjacency(n, 0.35, seed=n * 7 + block)
+        rho = np.asarray(support_ref(a))
+        got = np.asarray(local_step(a, rho, block=block))
+        want = np.asarray(local_step_ref(a, rho))
+        np.testing.assert_allclose(got, want, atol=0)
+
+    def test_fixpoint_of_complete_graph(self):
+        # K_n: rho = n-2 everywhere is already the fixpoint
+        n = 16
+        a = (np.ones((n, n)) - np.eye(n)).astype(np.float32)
+        rho = np.asarray(support_ref(a))
+        out = np.asarray(local_step(a, rho, block=16))
+        np.testing.assert_allclose(out, rho, atol=0)
+
+    def test_monotone_non_increasing(self):
+        a = random_adjacency(32, 0.4, seed=3)
+        rho = np.asarray(support_ref(a))
+        out = np.asarray(local_step(a, rho, block=16))
+        assert (out <= rho + 1e-6).all()
+        assert (out >= 0).all()
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        block=st.sampled_from([8, 16]),
+        n_blocks=st.integers(1, 3),
+        density=st.floats(0.0, 0.7),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, block, n_blocks, density, seed):
+        n = block * n_blocks
+        a = random_adjacency(n, density, seed)
+        rho = np.asarray(support_ref(a))
+        got = np.asarray(local_step(a, rho, block=block))
+        want = np.asarray(local_step_ref(a, rho))
+        np.testing.assert_allclose(got, want, atol=0)
+
+    def test_iterated_convergence_matches_peeling(self):
+        # iterate the local step to fixpoint; rho+2 must equal the
+        # trussness from the reference peeling decomposition
+        from compile.kernels.ref import truss_decompose_ref
+
+        a = random_adjacency(32, 0.35, seed=11)
+        rho = np.asarray(support_ref(a))
+        for _ in range(200):
+            new = np.asarray(local_step(a, rho, block=16))
+            if np.array_equal(new, rho):
+                break
+            rho = new
+        truss = truss_decompose_ref(a)
+        edges = a > 0
+        np.testing.assert_allclose(rho[edges] + 2, truss[edges], atol=0)
+
+
+# ---------------------------------------------------------------- peel ref
+
+
+class TestPeelRef:
+    def test_peel_drops_low_support(self):
+        # bowtie: two triangles sharing a vertex; all edges support 1
+        a = np.zeros((8, 8), dtype=np.float32)
+        for u, v in [(0, 1), (1, 2), (0, 2), (2, 3), (3, 4), (2, 4)]:
+            a[u, v] = a[v, u] = 1
+        out = np.asarray(peel_ref(a, 2.0))
+        assert out.sum() == 0  # no edge has support >= 2
+
+    def test_peel_keeps_dense_core(self):
+        n = 16
+        a = (np.ones((n, n)) - np.eye(n)).astype(np.float32)
+        out = np.asarray(peel_ref(a, float(n - 2)))
+        np.testing.assert_allclose(out, a, atol=0)
+
+
+# ---------------------------------------------------------------- perf model
+
+
+class TestPerfModel:
+    def test_vmem_footprint_within_budget(self):
+        # the AOT block sizes must fit VMEM with wide margin
+        for block in (64, 128, 256):
+            assert vmem_bytes(block) < 16 * 2**20 / 4, f"block {block}"
+
+    def test_mxu_estimate_monotone_and_bounded(self):
+        es = [mxu_utilization_estimate(b) for b in (64, 128, 256)]
+        assert all(0.0 < e <= 1.0 for e in es)
+        # 128-aligned blocks fully occupy the systolic array
+        assert es[1] > es[0]
+        assert es[1] > 0.95

@@ -1,0 +1,127 @@
+"""L2 model tests: peel fixpoints, decomposition agreement, padding."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.ref import support_ref, truss_decompose_ref
+from tests.test_kernel import random_adjacency
+
+
+def decompose_via_peel_model(a: np.ndarray, block: int) -> np.ndarray:
+    """Drive model.peel_model the way the Rust coordinator does: iterate
+    per k until the adjacency stops changing, label dropped edges."""
+    n = a.shape[0]
+    truss = np.zeros((n, n), dtype=np.int64)
+    truss[a > 0] = 2
+    cur = a.astype(np.float32)
+    k = 2
+    while cur.sum() > 0:
+        while True:
+            new, _s = model.peel_model(cur, np.float32(k - 1), block=block)
+            new = np.asarray(new)
+            dropped = (cur > 0) & (new == 0)
+            if not dropped.any():
+                break
+            truss[dropped] = k
+            cur = new
+        k += 1
+        assert k <= n + 3, "peel failed to converge"
+    return truss
+
+
+class TestPeelModel:
+    @pytest.mark.parametrize("n,block", [(32, 16), (64, 64)])
+    def test_matches_reference_decomposition(self, n, block):
+        a = random_adjacency(n, 0.3, seed=n)
+        got = decompose_via_peel_model(a, block)
+        want = truss_decompose_ref(a)
+        np.testing.assert_array_equal(got, want)
+
+    def test_outputs_support_alongside(self):
+        a = random_adjacency(32, 0.4, seed=5)
+        new, s = model.peel_model(a, np.float32(0.0), block=16)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(support_ref(a)), atol=0)
+        np.testing.assert_allclose(np.asarray(new), a, atol=0)  # thresh 0 keeps all
+
+    def test_planted_blocks_decompose_to_cliques(self):
+        # two disjoint K8s: every edge has trussness 8
+        n = 16
+        a = np.zeros((n, n), dtype=np.float32)
+        for base in (0, 8):
+            for i in range(8):
+                for j in range(8):
+                    if i != j:
+                        a[base + i, base + j] = 1
+        truss = decompose_via_peel_model(a, 16)
+        assert (truss[a > 0] == 8).all()
+
+
+class TestSupportModel:
+    def test_tuple_arity(self):
+        a = random_adjacency(16, 0.3, seed=2)
+        out = model.support_model(a, block=16)
+        assert isinstance(out, tuple) and len(out) == 1
+
+    def test_matches_ref(self):
+        a = random_adjacency(64, 0.25, seed=9)
+        (s,) = model.support_model(a, block=32)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(support_ref(a)), atol=0)
+
+
+class TestLocalModel:
+    def test_round_is_ref_round(self):
+        from compile.kernels.ref import local_step_ref
+
+        a = random_adjacency(32, 0.35, seed=4)
+        rho = np.asarray(support_ref(a))
+        (out,) = model.local_model(a, rho, block=16)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(local_step_ref(a, rho)), atol=0
+        )
+
+
+class TestPadding:
+    def test_pad_adjacency(self):
+        a = np.ones((10, 10), dtype=np.float32)
+        p = np.asarray(model.pad_adjacency(a, 16))
+        assert p.shape == (16, 16)
+        assert p[:10, :10].sum() == 100
+        assert p[10:, :].sum() == 0
+
+    def test_pad_noop_when_aligned(self):
+        a = np.ones((16, 16), dtype=np.float32)
+        p = np.asarray(model.pad_adjacency(a, 16))
+        assert p.shape == (16, 16)
+
+    def test_padded_support_equals_unpadded(self):
+        a = random_adjacency(20, 0.4, seed=6)
+        p = np.asarray(model.pad_adjacency(a, 32))
+        (s,) = model.support_model(p, block=32)
+        s = np.asarray(s)[:20, :20]
+        np.testing.assert_allclose(s, np.asarray(support_ref(a)), atol=0)
+
+
+class TestPeelConverge:
+    def test_fixpoint_matches_iterated_peel(self):
+        import jax.numpy as jnp
+        from compile.kernels.ref import peel_ref
+
+        a = random_adjacency(32, 0.3, seed=13)
+        for thresh in (1.0, 2.0, 3.0):
+            cur = jnp.asarray(a)
+            for _ in range(100):
+                new = peel_ref(cur, thresh)
+                if bool((new == cur).all()):
+                    break
+                cur = new
+            got, iters = model.peel_converge_model(a, np.float32(thresh), block=16)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(cur), atol=0)
+            assert float(iters) >= 1.0
+
+    def test_converge_on_stable_input_is_one_round(self):
+        n = 16
+        a = (np.ones((n, n)) - np.eye(n)).astype(np.float32)  # K16
+        got, iters = model.peel_converge_model(a, np.float32(1.0), block=16)
+        np.testing.assert_allclose(np.asarray(got), a, atol=0)
+        assert float(iters) == 1.0

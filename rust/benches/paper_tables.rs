@@ -1,0 +1,46 @@
+//! `cargo bench` entry point (criterion is unavailable offline, so this
+//! is a plain harness=false bench binary): regenerates every table and
+//! figure of the paper via `trussx::bench` and writes them to
+//! `bench_out/` as well as stdout.
+
+use std::io::Write;
+
+fn main() {
+    // `cargo bench` passes --bench; accept an optional filter arg.
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with("--")).collect();
+    let filter = args.first().map(|s| s.as_str());
+    let threads = trussx::par::Pool::default_threads().max(4);
+    let scale = std::env::var("TRUSSX_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+
+    std::fs::create_dir_all("bench_out").ok();
+    let mut failures = 0;
+    for id in trussx::bench::ALL {
+        if let Some(f) = filter {
+            if !id.contains(f) {
+                continue;
+            }
+        }
+        eprintln!("=== bench {id} (scale={scale}, threads={threads}) ===");
+        let t0 = std::time::Instant::now();
+        match trussx::bench::run(id, scale, threads) {
+            Ok(report) => {
+                println!("{report}");
+                println!("[{id} completed in {:.1}s]\n", t0.elapsed().as_secs_f64());
+                let path = format!("bench_out/{id}.txt");
+                if let Ok(mut f) = std::fs::File::create(&path) {
+                    let _ = f.write_all(report.as_bytes());
+                }
+            }
+            Err(e) => {
+                eprintln!("bench {id} FAILED: {e:#}");
+                failures += 1;
+            }
+        }
+    }
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,158 @@
+//! Extension benches: design-choice ablations and the XLA dense-block
+//! backend comparison (DESIGN.md §3, rows `ablate` and `xla`).
+
+use crate::gen::{suite, suite_by_name, SuiteGraph};
+use crate::graph::EdgeGraph;
+use crate::metrics::{time, Table};
+use crate::order::{self, Ordering};
+use crate::par::Pool;
+use crate::triangle;
+use crate::truss;
+use crate::util::fmt_secs;
+use anyhow::Result;
+use std::sync::atomic::AtomicI32;
+
+/// Ablations of PKT design choices called out in DESIGN.md:
+/// (a) support computation method inside the peel (oriented AM4 vs
+///     unoriented Ros);
+/// (b) vertex ordering fed to the whole pipeline (NAT vs DEG vs KCO).
+pub fn bench_ablate(scale: usize, threads: usize) -> String {
+    let pool = Pool::new(threads);
+    let mut out = String::new();
+
+    // (a) support method ablation
+    let mut t = Table::new(&["graph", "AM4-support(s)", "Ros-support(s)", "ratio"]);
+    for SuiteGraph { name, graph, .. } in suite(scale) {
+        let (g, _) = order::reorder(&graph, Ordering::KCore);
+        let eg = EdgeGraph::new(g);
+        let (_, am4_secs) = time(|| triangle::support_am4(&eg, &pool));
+        let (_, ros_secs) = time(|| triangle::support_ros(&eg, &pool));
+        t.row(vec![
+            name.into(),
+            fmt_secs(am4_secs),
+            fmt_secs(ros_secs),
+            format!("{:.2}", ros_secs / am4_secs.max(1e-12)),
+        ]);
+    }
+    out.push_str(&format!(
+        "## Ablation (a): support computation method ({threads} threads)\n\n{}\n",
+        t.render()
+    ));
+
+    // (b) ordering ablation over full PKT
+    let mut t = Table::new(&["graph", "PKT-NAT(s)", "PKT-DEG(s)", "PKT-KCO(s)", "NAT/KCO"]);
+    for SuiteGraph { name, graph, .. } in suite(scale) {
+        let mut secs = vec![];
+        for ord in [Ordering::Natural, Ordering::Degree, Ordering::KCore] {
+            let (g, _) = order::reorder(&graph, ord);
+            let eg = EdgeGraph::new(g);
+            let (_, s) = time(|| truss::pkt(&eg, &pool));
+            secs.push(s);
+        }
+        t.row(vec![
+            name.into(),
+            fmt_secs(secs[0]),
+            fmt_secs(secs[1]),
+            fmt_secs(secs[2]),
+            format!("{:.2}", secs[0] / secs[2].max(1e-12)),
+        ]);
+    }
+    out.push_str(&format!(
+        "## Ablation (b): vertex ordering fed to PKT ({threads} threads)\n\n{}\n",
+        t.render()
+    ));
+
+    // (c) peel with precomputed support: isolates the peel phase cost
+    let mut t = Table::new(&["graph", "peel-only(s)", "support-only(s)", "peel/support"]);
+    for SuiteGraph { name, graph, .. } in suite(scale) {
+        let (g, _) = order::reorder(&graph, Ordering::KCore);
+        let eg = EdgeGraph::new(g);
+        let (s0, support_secs) = time(|| triangle::support_am4(&eg, &pool));
+        let s: Vec<AtomicI32> =
+            s0.into_iter().map(|a| AtomicI32::new(a.into_inner() as i32)).collect();
+        let (_, peel_secs) = time(|| truss::pkt_with_support(&eg, &pool, s));
+        t.row(vec![
+            name.into(),
+            fmt_secs(peel_secs),
+            fmt_secs(support_secs),
+            format!("{:.2}", peel_secs / support_secs.max(1e-12)),
+        ]);
+    }
+    out.push_str(&format!(
+        "## Ablation (c): peel vs support phase cost ({threads} threads)\n\n{}",
+        t.render()
+    ));
+    out
+}
+
+/// XLA dense-block backend: agreement + time vs native PKT on graphs
+/// that fit one dense block, across the available block sizes.
+pub fn bench_xla() -> Result<String> {
+    let dir = crate::runtime::artifacts_dir();
+    let mut rt = crate::runtime::Runtime::cpu()?;
+    let manifest = match rt.load_manifest(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            return Ok(format!(
+                "## XLA dense-block bench: SKIPPED (artifacts not found at {}: {e:#})\nRun `make artifacts` first.\n",
+                dir.display()
+            ))
+        }
+    };
+    let mut t = Table::new(&["graph", "n", "block", "xla-decomp(s)", "pkt(s)", "agree"]);
+    let cases = [
+        ("pp-2x24", crate::gen::planted_partition(2, 24, 0.8, 0.02, 7)),
+        ("pp-4x20", crate::gen::planted_partition(4, 20, 0.7, 0.01, 8)),
+        ("er-100", crate::gen::erdos_renyi(100, 0.12, 9)),
+        ("k32", crate::gen::complete(32)),
+        ("ba-120", crate::gen::barabasi_albert(120, 5, 10)),
+    ];
+    let pool = Pool::with_default_threads();
+    for (name, g) in cases {
+        let eg = EdgeGraph::new(g);
+        let backend = truss::dense::DenseBackend::for_graph(&rt, &manifest, eg.n())?;
+        let (xla_truss, xla_secs) = time(|| backend.decompose(&eg));
+        let xla_truss = xla_truss?;
+        let (res, pkt_secs) = time(|| truss::pkt(&eg, &pool));
+        t.row(vec![
+            name.into(),
+            format!("{}", eg.n()),
+            format!("{}", backend.block),
+            fmt_secs(xla_secs),
+            fmt_secs(pkt_secs),
+            format!("{}", xla_truss == res.trussness),
+        ]);
+    }
+    // block-size sweep on one graph
+    let mut sweep = Table::new(&["block", "support(s)", "decomp(s)"]);
+    let g = suite_by_name("web-pp-s", 1).unwrap().graph;
+    let small = {
+        // shrink to the largest block size available
+        let bmax = *manifest.support_blocks().last().unwrap_or(&0);
+        let keep: Vec<(u32, u32)> = (0..g.n() as u32)
+            .flat_map(|u| {
+                g.neighbors(u)
+                    .iter()
+                    .filter(move |&&v| v > u && (v as usize) < bmax && (u as usize) < bmax)
+                    .map(move |&v| (u, v))
+            })
+            .collect();
+        crate::graph::GraphBuilder::new().edges_vec(keep).build()
+    };
+    let eg = EdgeGraph::new(small);
+    for b in manifest.support_blocks() {
+        if b < eg.n() {
+            continue;
+        }
+        let backend = truss::dense::DenseBackend::with_block(&rt, b);
+        let (_, s_secs) = time(|| backend.support(&eg).unwrap());
+        let (_, d_secs) = time(|| backend.decompose(&eg).unwrap());
+        sweep.row(vec![format!("{b}"), fmt_secs(s_secs), fmt_secs(d_secs)]);
+    }
+    Ok(format!(
+        "## XLA dense-block backend vs native PKT\n\n{}\n### Block-size sweep (subgraph n={})\n\n{}",
+        t.render(),
+        eg.n(),
+        sweep.render()
+    ))
+}

@@ -1,0 +1,131 @@
+//! Figures 4–6 of the paper, regenerated as text series.
+
+use crate::gen::{suite, suite_by_name, SuiteGraph};
+use crate::graph::EdgeGraph;
+use crate::metrics::Table;
+use crate::order::{self, Ordering};
+use crate::par::Pool;
+use crate::truss;
+use crate::util::fmt_secs;
+
+/// Figure 4: fraction of PKT time per stage (support / scan / process).
+pub fn bench_fig4(scale: usize, threads: usize) -> String {
+    let pool = Pool::new(threads);
+    let mut t = Table::new(&["graph", "support%", "scan%", "process%", "other%", "total(s)"]);
+    for SuiteGraph { name, graph, .. } in suite(scale) {
+        let (g, _) = order::reorder(&graph, Ordering::KCore);
+        let eg = EdgeGraph::new(g);
+        let res = truss::pkt(&eg, &pool);
+        let s = &res.stats;
+        let total = s.total_secs.max(1e-12);
+        let other = (total - s.support_secs - s.scan_secs - s.process_secs).max(0.0);
+        t.row(vec![
+            name.into(),
+            format!("{:.1}", 100.0 * s.support_secs / total),
+            format!("{:.1}", 100.0 * s.scan_secs / total),
+            format!("{:.1}", 100.0 * s.process_secs / total),
+            format!("{:.1}", 100.0 * other / total),
+            fmt_secs(total),
+        ]);
+    }
+    format!(
+        "## Figure 4: PKT execution-time breakdown by stage ({threads} threads)\n\n{}",
+        t.render()
+    )
+}
+
+/// Figure 5: PKT relative scaling — time and speedup at 1..=max threads
+/// (powers of two).
+pub fn bench_fig5(scale: usize, max_threads: usize) -> String {
+    let mut counts = vec![1usize];
+    while counts.last().unwrap() * 2 <= max_threads.max(1) {
+        counts.push(counts.last().unwrap() * 2);
+    }
+    let headers: Vec<String> = std::iter::once("graph".to_string())
+        .chain(counts.iter().map(|t| format!("{t}t(s)")))
+        .chain(counts.iter().map(|t| format!("su{t}t")))
+        .collect();
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&header_refs);
+    for SuiteGraph { name, graph, .. } in suite(scale) {
+        let (g, _) = order::reorder(&graph, Ordering::KCore);
+        let eg = EdgeGraph::new(g);
+        let times: Vec<f64> = counts
+            .iter()
+            .map(|&t| {
+                let pool = Pool::new(t);
+                let start = std::time::Instant::now();
+                let _ = truss::pkt(&eg, &pool);
+                start.elapsed().as_secs_f64()
+            })
+            .collect();
+        let mut row = vec![name.to_string()];
+        row.extend(times.iter().map(|&s| fmt_secs(s)));
+        row.extend(times.iter().map(|&s| format!("{:.2}", times[0] / s.max(1e-12))));
+        table.row(row);
+    }
+    format!(
+        "## Figure 5: PKT parallel relative scaling (thread counts {counts:?})\n\n{}\nNOTE: this container exposes {} hardware thread(s); speedups beyond that count measure synchronization overhead only (see DESIGN.md §2).\n",
+        table.render(),
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    )
+}
+
+/// Figure 6: trussness and execution-time distributions for the uk-2002
+/// analogue (web-pp-m): CDF of edges by trussness and CDF of processing
+/// time by peel level.
+pub fn bench_fig6(scale: usize, threads: usize) -> String {
+    let sg = suite_by_name("web-pp-m", scale).expect("suite graph");
+    let (g, _) = order::reorder(&sg.graph, Ordering::KCore);
+    let eg = EdgeGraph::new(g);
+    let pool = Pool::new(threads);
+    let res = truss::pkt(&eg, &pool);
+    let m = eg.m() as f64;
+
+    // CDFs over peel levels (level l ↔ trussness l+2)
+    let mut t = Table::new(&["trussness", "edges", "edge-CDF%", "level(s)", "time-CDF%"]);
+    let total_time: f64 = res.stats.per_level.iter().map(|l| l.secs).sum();
+    let mut edge_cum = 0u64;
+    let mut time_cum = 0.0;
+    let mut p50_truss = None;
+    let mut p90_truss = None;
+    let mut p50_time = None;
+    let mut p90_time = None;
+    for ls in &res.stats.per_level {
+        edge_cum += ls.edges;
+        time_cum += ls.secs;
+        let ecdf = 100.0 * edge_cum as f64 / m;
+        let tcdf = 100.0 * time_cum / total_time.max(1e-12);
+        let k = ls.level + 2;
+        if p50_truss.is_none() && ecdf >= 50.0 {
+            p50_truss = Some(k);
+        }
+        if p90_truss.is_none() && ecdf >= 90.0 {
+            p90_truss = Some(k);
+        }
+        if p50_time.is_none() && tcdf >= 50.0 {
+            p50_time = Some(k);
+        }
+        if p90_time.is_none() && tcdf >= 90.0 {
+            p90_time = Some(k);
+        }
+        t.row(vec![
+            format!("{k}"),
+            format!("{}", ls.edges),
+            format!("{ecdf:.1}"),
+            format!("{:.5}", ls.secs),
+            format!("{tcdf:.1}"),
+        ]);
+    }
+    format!(
+        "## Figure 6: trussness & time distributions for {} ({} threads)\n\n{}\n50% of edges at trussness <= {:?}, 90% at <= {:?}; 50% of time at trussness <= {:?}, 90% at <= {:?} (t_max = {}).\n",
+        sg.name,
+        threads,
+        t.render(),
+        p50_truss.unwrap_or(0),
+        p90_truss.unwrap_or(0),
+        p50_time.unwrap_or(0),
+        p90_time.unwrap_or(0),
+        truss::max_trussness(&res.trussness)
+    )
+}

@@ -1,0 +1,34 @@
+//! Bench harness regenerating every table and figure of the paper.
+//! See DESIGN.md §3 for the experiment index.
+
+mod tables;
+mod figures;
+mod ablate;
+
+pub use ablate::{bench_ablate, bench_xla};
+pub use figures::{bench_fig4, bench_fig5, bench_fig6};
+pub use tables::{bench_table1, bench_table2, bench_table3, bench_table4};
+
+use anyhow::{bail, Result};
+
+/// Run a bench by experiment id, writing its report to the returned
+/// string (also printed by the CLI/bench shims).
+pub fn run(id: &str, scale: usize, threads: usize) -> Result<String> {
+    match id {
+        "table1" => Ok(bench_table1(scale)),
+        "table2" => Ok(bench_table2(scale, threads)),
+        "table3" => Ok(bench_table3(scale)),
+        "table4" => Ok(bench_table4(scale, threads)),
+        "fig4" => Ok(bench_fig4(scale, threads)),
+        "fig5" => Ok(bench_fig5(scale, threads)),
+        "fig6" => Ok(bench_fig6(scale, threads)),
+        "ablate" => Ok(bench_ablate(scale, threads)),
+        "xla" => bench_xla(),
+        _ => bail!("unknown bench id '{id}' (table1-4, fig4-6, ablate, xla)"),
+    }
+}
+
+/// All experiment ids in run order.
+pub const ALL: [&str; 9] = [
+    "table1", "table2", "table3", "table4", "fig4", "fig5", "fig6", "ablate", "xla",
+];

@@ -1,0 +1,263 @@
+//! Job configuration: graph source, preprocessing, algorithm, threads.
+//!
+//! Everything is parseable from compact spec strings so the CLI, the
+//! server protocol, and the examples share one format:
+//!
+//! ```text
+//! graph spec:  suite:web-pp-s | rmat:n=1024,m=8192 | er:n=500,p=0.05
+//!              | ba:n=1000,k=4 | ws:n=500,k=4,beta=0.1
+//!              | pp:blocks=8,size=24,pin=0.7,pout=0.001
+//!              | complete:n=16 | file:/path/to/graph.el
+//! algorithm:   pkt | wc | ros | local
+//! ```
+
+use crate::graph::{io, Graph};
+use crate::order::Ordering;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+/// Which decomposition algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    Pkt,
+    Wc,
+    Ros,
+    Local,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "pkt" => Ok(Self::Pkt),
+            "wc" => Ok(Self::Wc),
+            "ros" => Ok(Self::Ros),
+            "local" => Ok(Self::Local),
+            _ => bail!("unknown algorithm '{s}' (pkt|wc|ros|local)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Pkt => "pkt",
+            Self::Wc => "wc",
+            Self::Ros => "ros",
+            Self::Local => "local",
+        }
+    }
+}
+
+/// A graph source description.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GraphSpec {
+    Suite { name: String, scale: usize },
+    Rmat { n: usize, m: usize, a: f64, b: f64, c: f64, seed: u64 },
+    Er { n: usize, p: f64, seed: u64 },
+    Ba { n: usize, k: usize, seed: u64 },
+    Ws { n: usize, k: usize, beta: f64, seed: u64 },
+    Planted { blocks: usize, size: usize, p_in: f64, p_out: f64, seed: u64 },
+    Complete { n: usize },
+    File { path: String },
+}
+
+fn params(body: &str) -> Result<HashMap<&str, &str>> {
+    let mut out = HashMap::new();
+    for kv in body.split(',').filter(|s| !s.is_empty()) {
+        let (k, v) = kv
+            .split_once('=')
+            .with_context(|| format!("bad param '{kv}' (want key=value)"))?;
+        out.insert(k.trim(), v.trim());
+    }
+    Ok(out)
+}
+
+fn get<T: std::str::FromStr>(p: &HashMap<&str, &str>, key: &str, default: T) -> Result<T> {
+    match p.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| anyhow!("bad value for '{key}': {v}")),
+    }
+}
+
+impl GraphSpec {
+    /// Parse a `kind:params` spec string.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (kind, body) = s.split_once(':').unwrap_or((s, ""));
+        match kind {
+            "suite" => Ok(Self::Suite {
+                name: body.split(',').next().unwrap_or("").to_string(),
+                scale: 1,
+            }),
+            "rmat" => {
+                let p = params(body)?;
+                Ok(Self::Rmat {
+                    n: get(&p, "n", 1024)?,
+                    m: get(&p, "m", 4096)?,
+                    a: get(&p, "a", 0.57)?,
+                    b: get(&p, "b", 0.19)?,
+                    c: get(&p, "c", 0.19)?,
+                    seed: get(&p, "seed", 42)?,
+                })
+            }
+            "er" => {
+                let p = params(body)?;
+                Ok(Self::Er {
+                    n: get(&p, "n", 1000)?,
+                    p: get(&p, "p", 0.01)?,
+                    seed: get(&p, "seed", 42)?,
+                })
+            }
+            "ba" => {
+                let p = params(body)?;
+                Ok(Self::Ba {
+                    n: get(&p, "n", 1000)?,
+                    k: get(&p, "k", 4)?,
+                    seed: get(&p, "seed", 42)?,
+                })
+            }
+            "ws" => {
+                let p = params(body)?;
+                Ok(Self::Ws {
+                    n: get(&p, "n", 1000)?,
+                    k: get(&p, "k", 4)?,
+                    beta: get(&p, "beta", 0.1)?,
+                    seed: get(&p, "seed", 42)?,
+                })
+            }
+            "pp" => {
+                let p = params(body)?;
+                Ok(Self::Planted {
+                    blocks: get(&p, "blocks", 8)?,
+                    size: get(&p, "size", 24)?,
+                    p_in: get(&p, "pin", 0.7)?,
+                    p_out: get(&p, "pout", 0.001)?,
+                    seed: get(&p, "seed", 42)?,
+                })
+            }
+            "complete" => {
+                let p = params(body)?;
+                Ok(Self::Complete { n: get(&p, "n", 8)? })
+            }
+            "file" => Ok(Self::File { path: body.to_string() }),
+            _ => bail!("unknown graph spec kind '{kind}'"),
+        }
+    }
+
+    /// Materialize the graph.
+    pub fn build(&self) -> Result<Graph> {
+        Ok(match self {
+            Self::Suite { name, scale } => {
+                crate::gen::suite_by_name(name, *scale)
+                    .with_context(|| format!("unknown suite graph '{name}'"))?
+                    .graph
+            }
+            Self::Rmat { n, m, a, b, c, seed } => crate::gen::rmat(*n, *m, *a, *b, *c, *seed),
+            Self::Er { n, p, seed } => crate::gen::erdos_renyi(*n, *p, *seed),
+            Self::Ba { n, k, seed } => crate::gen::barabasi_albert(*n, *k, *seed),
+            Self::Ws { n, k, beta, seed } => crate::gen::watts_strogatz(*n, *k, *beta, *seed),
+            Self::Planted { blocks, size, p_in, p_out, seed } => {
+                crate::gen::planted_partition(*blocks, *size, *p_in, *p_out, *seed)
+            }
+            Self::Complete { n } => crate::gen::complete(*n),
+            Self::File { path } => io::read_auto(path)?,
+        })
+    }
+
+    /// Short description for reports.
+    pub fn describe(&self) -> String {
+        match self {
+            Self::Suite { name, .. } => format!("suite:{name}"),
+            Self::Rmat { n, m, .. } => format!("rmat(n={n},m={m})"),
+            Self::Er { n, p, .. } => format!("er(n={n},p={p})"),
+            Self::Ba { n, k, .. } => format!("ba(n={n},k={k})"),
+            Self::Ws { n, k, beta, .. } => format!("ws(n={n},k={k},beta={beta})"),
+            Self::Planted { blocks, size, .. } => format!("pp({blocks}x{size})"),
+            Self::Complete { n } => format!("K{n}"),
+            Self::File { path } => format!("file:{path}"),
+        }
+    }
+}
+
+/// A full decomposition job.
+#[derive(Clone, Debug)]
+pub struct JobConfig {
+    pub graph: GraphSpec,
+    pub ordering: Ordering,
+    pub algorithm: Algorithm,
+    pub threads: usize,
+}
+
+impl JobConfig {
+    pub fn new(graph: GraphSpec) -> Self {
+        Self {
+            graph,
+            ordering: Ordering::KCore,
+            algorithm: Algorithm::Pkt,
+            threads: crate::par::Pool::default_threads(),
+        }
+    }
+
+    pub fn algorithm(mut self, a: Algorithm) -> Self {
+        self.algorithm = a;
+        self
+    }
+
+    pub fn ordering(mut self, o: Ordering) -> Self {
+        self.ordering = o;
+        self
+    }
+
+    pub fn threads(mut self, t: usize) -> Self {
+        self.threads = t.max(1);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(
+            GraphSpec::parse("complete:n=5").unwrap(),
+            GraphSpec::Complete { n: 5 }
+        );
+        assert_eq!(
+            GraphSpec::parse("er:n=10,p=0.5,seed=7").unwrap(),
+            GraphSpec::Er { n: 10, p: 0.5, seed: 7 }
+        );
+        match GraphSpec::parse("rmat:n=64,m=128").unwrap() {
+            GraphSpec::Rmat { n: 64, m: 128, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        assert!(GraphSpec::parse("wat:x=1").is_err());
+        assert!(GraphSpec::parse("er:n=x").is_err());
+        assert!(GraphSpec::parse("er:nop").is_err());
+    }
+
+    #[test]
+    fn specs_build() {
+        let g = GraphSpec::parse("complete:n=6").unwrap().build().unwrap();
+        assert_eq!(g.m(), 15);
+        let g = GraphSpec::parse("pp:blocks=2,size=8,pin=1.0,pout=0.0")
+            .unwrap()
+            .build()
+            .unwrap();
+        assert_eq!(g.m(), 2 * 28);
+    }
+
+    #[test]
+    fn algorithm_parse() {
+        assert_eq!(Algorithm::parse("pkt").unwrap(), Algorithm::Pkt);
+        assert_eq!(Algorithm::parse("local").unwrap(), Algorithm::Local);
+        assert!(Algorithm::parse("magic").is_err());
+    }
+
+    #[test]
+    fn job_builder() {
+        let j = JobConfig::new(GraphSpec::Complete { n: 4 })
+            .algorithm(Algorithm::Wc)
+            .threads(2);
+        assert_eq!(j.algorithm, Algorithm::Wc);
+        assert_eq!(j.threads, 2);
+    }
+}

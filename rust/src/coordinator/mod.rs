@@ -1,0 +1,14 @@
+//! The coordination layer: job configuration, the decomposition
+//! pipeline (load/generate → order → decompose → report), and a
+//! multi-client analytics server.
+//!
+//! This is the "framework" face of the library: examples, the CLI, the
+//! benches and the server all drive the same [`pipeline::run_job`].
+
+mod config;
+mod pipeline;
+mod server;
+
+pub use config::{Algorithm, GraphSpec, JobConfig};
+pub use pipeline::{run_job, JobReport};
+pub use server::{serve, Client, ServerHandle};

@@ -1,0 +1,231 @@
+//! A multi-client truss-analytics server over TCP (std::net,
+//! thread-per-connection — tokio is not available offline).
+//!
+//! Line protocol (one request per line, one `OK ...` / `ERR ...` reply):
+//!
+//! ```text
+//! DECOMP <graphspec> [algo=pkt|wc|ros|local] [threads=N] [order=nat|deg|kco]
+//! HIST   <graphspec> [...same options]       → trussness histogram
+//! STATUS                                      → jobs served, platform
+//! QUIT                                        → close this connection
+//! ```
+
+use super::{Algorithm, GraphSpec, JobConfig};
+use crate::order::Ordering as VOrdering;
+use anyhow::{anyhow, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+struct ServerState {
+    stop: AtomicBool,
+    jobs: AtomicU64,
+}
+
+/// Handle to a running server; dropping it does NOT stop the server —
+/// call [`ServerHandle::shutdown`].
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    state: Arc<ServerState>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Jobs served so far.
+    pub fn jobs_served(&self) -> u64 {
+        self.state.jobs.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting and join the accept loop.
+    pub fn shutdown(mut self) {
+        self.state.stop.store(true, Ordering::SeqCst);
+        // poke the accept loop awake
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Start the server on `addr` (use port 0 for an ephemeral port).
+/// Returns once the listener is bound.
+pub fn serve(addr: &str) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let local = listener.local_addr()?;
+    let state = Arc::new(ServerState { stop: AtomicBool::new(false), jobs: AtomicU64::new(0) });
+    let accept_state = state.clone();
+    let join = std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if accept_state.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = conn else { continue };
+            let st = accept_state.clone();
+            std::thread::spawn(move || {
+                let _ = handle_connection(stream, &st);
+            });
+        }
+    });
+    Ok(ServerHandle { addr: local, state, join: Some(join) })
+}
+
+fn handle_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let req = line.trim();
+        if req.is_empty() {
+            continue;
+        }
+        let reply = match dispatch(req, state) {
+            Ok(Some(r)) => r,
+            Ok(None) => return Ok(()), // QUIT
+            Err(e) => format!("ERR {e:#}").replace('\n', " "),
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        let _ = peer;
+    }
+}
+
+fn dispatch(req: &str, state: &ServerState) -> Result<Option<String>> {
+    let mut parts = req.split_whitespace();
+    let verb = parts.next().unwrap_or("").to_ascii_uppercase();
+    match verb.as_str() {
+        "QUIT" => Ok(None),
+        "STATUS" => Ok(Some(format!(
+            "OK jobs={} threads_default={}",
+            state.jobs.load(Ordering::Relaxed),
+            crate::par::Pool::default_threads()
+        ))),
+        "DECOMP" | "HIST" => {
+            let spec_str = parts.next().context("missing graph spec")?;
+            let cfg = parse_job(spec_str, parts)?;
+            let report = super::run_job(&cfg)?;
+            state.jobs.fetch_add(1, Ordering::Relaxed);
+            if verb == "DECOMP" {
+                Ok(Some(format!("OK {}", report.summary())))
+            } else {
+                let hist: Vec<String> = report
+                    .histogram
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &c)| c > 0)
+                    .map(|(k, &c)| format!("{k}:{c}"))
+                    .collect();
+                Ok(Some(format!("OK {}", hist.join(","))))
+            }
+        }
+        _ => Err(anyhow!("unknown verb '{verb}' (DECOMP|HIST|STATUS|QUIT)")),
+    }
+}
+
+fn parse_job<'a>(spec_str: &str, opts: impl Iterator<Item = &'a str>) -> Result<JobConfig> {
+    let spec = GraphSpec::parse(spec_str)?;
+    let mut cfg = JobConfig::new(spec);
+    for opt in opts {
+        let (k, v) = opt.split_once('=').with_context(|| format!("bad option '{opt}'"))?;
+        match k {
+            "algo" => cfg.algorithm = Algorithm::parse(v)?,
+            "threads" => cfg.threads = v.parse().context("bad threads")?,
+            "order" => {
+                cfg.ordering =
+                    VOrdering::parse(v).with_context(|| format!("bad order '{v}'"))?
+            }
+            _ => return Err(anyhow!("unknown option '{k}'")),
+        }
+    }
+    Ok(cfg)
+}
+
+/// Small blocking client for the line protocol.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Self { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    /// Send one request line, read one reply line.
+    pub fn request(&mut self, req: &str) -> Result<String> {
+        self.writer.write_all(req.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(line.trim_end().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_decomp_roundtrip() {
+        let h = serve("127.0.0.1:0").unwrap();
+        let mut c = Client::connect(h.addr).unwrap();
+        let r = c.request("DECOMP complete:n=6 algo=pkt threads=2").unwrap();
+        assert!(r.starts_with("OK "), "{r}");
+        assert!(r.contains("tmax=6"), "{r}");
+        let r = c.request("STATUS").unwrap();
+        assert!(r.contains("jobs=1"), "{r}");
+        h.shutdown();
+    }
+
+    #[test]
+    fn server_hist() {
+        let h = serve("127.0.0.1:0").unwrap();
+        let mut c = Client::connect(h.addr).unwrap();
+        let r = c.request("HIST complete:n=5").unwrap();
+        assert_eq!(r, "OK 5:10");
+        h.shutdown();
+    }
+
+    #[test]
+    fn server_error_paths() {
+        let h = serve("127.0.0.1:0").unwrap();
+        let mut c = Client::connect(h.addr).unwrap();
+        assert!(c.request("FROB x").unwrap().starts_with("ERR"));
+        assert!(c.request("DECOMP").unwrap().starts_with("ERR"));
+        assert!(c.request("DECOMP er:n=10,p=0.1 algo=zzz").unwrap().starts_with("ERR"));
+        assert!(c.request("DECOMP er:n=10,p=0.1 bogus").unwrap().starts_with("ERR"));
+        // server still alive after errors
+        assert!(c.request("STATUS").unwrap().starts_with("OK"));
+        h.shutdown();
+    }
+
+    #[test]
+    fn server_concurrent_clients() {
+        let h = serve("127.0.0.1:0").unwrap();
+        let addr = h.addr;
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(addr).unwrap();
+                    let r = c
+                        .request(&format!("DECOMP er:n=60,p=0.15,seed={i} threads=1"))
+                        .unwrap();
+                    assert!(r.starts_with("OK "), "{r}");
+                })
+            })
+            .collect();
+        for th in handles {
+            th.join().unwrap();
+        }
+        assert_eq!(h.jobs_served(), 4);
+        h.shutdown();
+    }
+}

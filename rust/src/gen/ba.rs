@@ -1,0 +1,75 @@
+//! Barabási–Albert preferential attachment — power-law degrees with
+//! moderate clustering; a second social-network-like family.
+
+use crate::graph::{Graph, GraphBuilder, Vertex};
+use crate::util::Rng;
+
+/// BA model: start from a clique on `m0 = k` vertices, then each new
+/// vertex attaches to `k` existing vertices chosen proportionally to
+/// degree (implemented with the repeated-endpoint trick: sampling a
+/// uniform endpoint from the running edge list is degree-proportional).
+pub fn barabasi_albert(n: usize, k: usize, seed: u64) -> Graph {
+    assert!(k >= 1 && n > k, "need n > k >= 1");
+    let mut rng = Rng::new(seed);
+    // endpoint pool: every edge contributes both endpoints
+    let mut pool: Vec<Vertex> = Vec::with_capacity(2 * n * k);
+    let mut edges: Vec<(Vertex, Vertex)> = Vec::with_capacity(n * k);
+    // seed clique on k+1 vertices
+    for u in 0..=k {
+        for v in (u + 1)..=k {
+            edges.push((u as Vertex, v as Vertex));
+            pool.push(u as Vertex);
+            pool.push(v as Vertex);
+        }
+    }
+    for u in (k + 1)..n {
+        let mut targets = Vec::with_capacity(k);
+        while targets.len() < k {
+            let t = pool[rng.range(0, pool.len())];
+            if t != u as Vertex && !targets.contains(&t) {
+                targets.push(t);
+            }
+        }
+        for &t in &targets {
+            edges.push((u as Vertex, t));
+            pool.push(u as Vertex);
+            pool.push(t);
+        }
+    }
+    GraphBuilder::new().num_vertices(n).edges_vec(edges).build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ba_deterministic() {
+        assert_eq!(barabasi_albert(200, 3, 4), barabasi_albert(200, 3, 4));
+    }
+
+    #[test]
+    fn ba_edge_count() {
+        let n = 300;
+        let k = 4;
+        let g = barabasi_albert(n, k, 1);
+        // clique edges + k per added vertex (dedup can only remove a few)
+        let expected = k * (k + 1) / 2 + (n - k - 1) * k;
+        assert_eq!(g.m(), expected);
+    }
+
+    #[test]
+    fn ba_hub_emerges() {
+        let g = barabasi_albert(500, 2, 9);
+        // preferential attachment → max degree well above k
+        assert!(g.max_degree() > 20, "dmax={}", g.max_degree());
+    }
+
+    #[test]
+    fn ba_valid_and_connected() {
+        let g = barabasi_albert(128, 3, 2);
+        g.validate();
+        let (_, ncomp) = g.components();
+        assert_eq!(ncomp, 1);
+    }
+}

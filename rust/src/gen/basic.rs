@@ -1,0 +1,103 @@
+//! Deterministic structured generators: complete graphs, rings, stars,
+//! paths, and 2-D grids. Primarily used by tests (known truss values).
+
+use crate::graph::{Graph, GraphBuilder, Vertex};
+
+/// Complete graph K_n. Every edge of K_n has trussness n (each edge is in
+/// n−2 triangles), making it the canonical truss test case.
+pub fn complete(n: usize) -> Graph {
+    let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            edges.push((u as Vertex, v as Vertex));
+        }
+    }
+    GraphBuilder::new().num_vertices(n).edges_vec(edges).build()
+}
+
+/// Cycle C_n (n ≥ 3). Triangle-free for n > 3, so every edge has
+/// trussness 2.
+pub fn ring(n: usize) -> Graph {
+    assert!(n >= 3);
+    let mut edges = Vec::with_capacity(n);
+    for u in 0..n {
+        edges.push((u as Vertex, ((u + 1) % n) as Vertex));
+    }
+    GraphBuilder::new().num_vertices(n).edges_vec(edges).build()
+}
+
+/// Star S_n: vertex 0 connected to 1..n. Triangle-free; trussness 2.
+pub fn star(n: usize) -> Graph {
+    let edges: Vec<_> = (1..n).map(|v| (0 as Vertex, v as Vertex)).collect();
+    GraphBuilder::new().num_vertices(n).edges_vec(edges).build()
+}
+
+/// Simple path P_n.
+pub fn path(n: usize) -> Graph {
+    let edges: Vec<_> = (1..n).map(|v| ((v - 1) as Vertex, v as Vertex)).collect();
+    GraphBuilder::new().num_vertices(n).edges_vec(edges).build()
+}
+
+/// rows×cols 2-D grid (4-neighborhood). Triangle-free; trussness 2.
+pub fn grid2d(rows: usize, cols: usize) -> Graph {
+    let mut edges = Vec::new();
+    let id = |r: usize, c: usize| (r * cols + c) as Vertex;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                edges.push((id(r, c), id(r, c + 1)));
+            }
+            if r + 1 < rows {
+                edges.push((id(r, c), id(r + 1, c)));
+            }
+        }
+    }
+    GraphBuilder::new().num_vertices(rows * cols).edges_vec(edges).build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_counts() {
+        let g = complete(6);
+        assert_eq!(g.n(), 6);
+        assert_eq!(g.m(), 15);
+        assert_eq!(g.max_degree(), 5);
+        // wedges of K_6: 6 * C(5,2) = 60
+        assert_eq!(g.wedge_count(), 60);
+    }
+
+    #[test]
+    fn ring_counts() {
+        let g = ring(10);
+        assert_eq!(g.n(), 10);
+        assert_eq!(g.m(), 10);
+        assert_eq!(g.max_degree(), 2);
+    }
+
+    #[test]
+    fn star_counts() {
+        let g = star(8);
+        assert_eq!(g.m(), 7);
+        assert_eq!(g.degree(0), 7);
+        assert_eq!(g.wedge_count(), 21);
+    }
+
+    #[test]
+    fn grid_counts() {
+        let g = grid2d(3, 4);
+        assert_eq!(g.n(), 12);
+        // 3*3 horizontal + 2*4 vertical = 9 + 8 = 17
+        assert_eq!(g.m(), 17);
+    }
+
+    #[test]
+    fn path_counts() {
+        let g = path(5);
+        assert_eq!(g.m(), 4);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(2), 2);
+    }
+}

@@ -1,0 +1,81 @@
+//! Erdős–Rényi G(n, p) generator (low clustering — the "hard" end for
+//! triangle-based work estimates, high wedge/triangle ratio like
+//! as-skitter in Table 1).
+
+use crate::graph::{Graph, GraphBuilder, Vertex};
+use crate::util::Rng;
+
+/// Sample G(n, p) using geometric skipping (Batagelj–Brandes), O(n + m).
+pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> Graph {
+    assert!((0.0..=1.0).contains(&p));
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::new();
+    if p > 0.0 && n > 1 {
+        if p >= 1.0 {
+            return super::complete(n);
+        }
+        let lq = (1.0 - p).ln();
+        let (mut v, mut w): (i64, i64) = (1, -1);
+        while (v as usize) < n {
+            let r = 1.0 - rng.f64(); // (0, 1]
+            w += 1 + (r.ln() / lq).floor() as i64;
+            while w >= v && (v as usize) < n {
+                w -= v;
+                v += 1;
+            }
+            if (v as usize) < n {
+                edges.push((w as Vertex, v as Vertex));
+            }
+        }
+    }
+    GraphBuilder::new().num_vertices(n).edges_vec(edges).build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::forall;
+
+    #[test]
+    fn er_deterministic() {
+        let a = erdos_renyi(100, 0.1, 5);
+        let b = erdos_renyi(100, 0.1, 5);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn er_seed_changes_graph() {
+        let a = erdos_renyi(100, 0.1, 5);
+        let b = erdos_renyi(100, 0.1, 6);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn er_density_close_to_p() {
+        let n = 400;
+        let p = 0.05;
+        let g = erdos_renyi(n, p, 11);
+        let expected = p * (n * (n - 1) / 2) as f64;
+        let got = g.m() as f64;
+        assert!(
+            (got - expected).abs() < 0.15 * expected,
+            "m={got} expected≈{expected}"
+        );
+    }
+
+    #[test]
+    fn er_extremes() {
+        assert_eq!(erdos_renyi(50, 0.0, 1).m(), 0);
+        assert_eq!(erdos_renyi(10, 1.0, 1).m(), 45);
+        assert_eq!(erdos_renyi(1, 0.5, 1).m(), 0);
+    }
+
+    #[test]
+    fn er_always_valid() {
+        forall("er-valid", 16, |rng| {
+            let n = rng.range(1, 80);
+            let p = rng.f64();
+            erdos_renyi(n, p, rng.next_u64()).validate();
+        });
+    }
+}

@@ -1,0 +1,23 @@
+//! Synthetic graph generators.
+//!
+//! The paper evaluates on 15 SNAP/UF graphs (social networks and web
+//! crawls). Those datasets are not available in this environment, so the
+//! test suite is generated synthetically with the same controllable
+//! structure the paper's analysis keys on: degree skew (RMAT), clustering
+//! (planted partition / Watts–Strogatz), and scale. See DESIGN.md §2.
+
+mod basic;
+mod ba;
+mod er;
+mod planted;
+mod rmat;
+mod suite;
+mod ws;
+
+pub use ba::barabasi_albert;
+pub use basic::{complete, ring, star, grid2d, path};
+pub use er::erdos_renyi;
+pub use planted::{planted_community, planted_partition};
+pub use rmat::rmat;
+pub use suite::{suite, suite_by_name, SuiteGraph, SUITE_NAMES};
+pub use ws::watts_strogatz;

@@ -1,0 +1,104 @@
+//! Planted-partition (stochastic block model) generator — dense
+//! communities with sparse inter-community edges. Used by the community
+//! detection example and as the high-trussness web-crawl analogue
+//! (hollywood-2009, indochina-2004: low wedge/triangle ratio, high t_max).
+
+use crate::graph::{Graph, GraphBuilder, Vertex};
+use crate::util::Rng;
+
+/// `communities` blocks of `block_size` vertices; intra-block edge
+/// probability `p_in`, inter-block probability `p_out`.
+pub fn planted_partition(
+    communities: usize,
+    block_size: usize,
+    p_in: f64,
+    p_out: f64,
+    seed: u64,
+) -> Graph {
+    assert!(communities >= 1 && block_size >= 1);
+    let n = communities * block_size;
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::new();
+    let block_of = |u: usize| u / block_size;
+    // intra-block: dense loop per block (block_size is small)
+    for b in 0..communities {
+        let base = b * block_size;
+        for i in 0..block_size {
+            for j in (i + 1)..block_size {
+                if rng.chance(p_in) {
+                    edges.push(((base + i) as Vertex, (base + j) as Vertex));
+                }
+            }
+        }
+    }
+    // inter-block: geometric skipping over the full vertex-pair space,
+    // keeping only cross-block pairs (p_out is small).
+    if p_out > 0.0 && communities > 1 {
+        let lq = (1.0 - p_out).ln();
+        let (mut v, mut w): (i64, i64) = (1, -1);
+        while (v as usize) < n {
+            let r = 1.0 - rng.f64();
+            w += 1 + (r.ln() / lq).floor() as i64;
+            while w >= v && (v as usize) < n {
+                w -= v;
+                v += 1;
+            }
+            if (v as usize) < n && block_of(w as usize) != block_of(v as usize) {
+                edges.push((w as Vertex, v as Vertex));
+            }
+        }
+    }
+    GraphBuilder::new().num_vertices(n).edges_vec(edges).build()
+}
+
+/// Ground-truth community id of vertex `u` for a graph produced by
+/// [`planted_partition`] with the same `block_size`.
+pub fn planted_community(u: Vertex, block_size: usize) -> usize {
+    u as usize / block_size
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn planted_deterministic() {
+        assert_eq!(
+            planted_partition(4, 16, 0.8, 0.01, 3),
+            planted_partition(4, 16, 0.8, 0.01, 3)
+        );
+    }
+
+    #[test]
+    fn planted_pure_blocks() {
+        let g = planted_partition(3, 8, 1.0, 0.0, 1);
+        // three disjoint K_8s
+        assert_eq!(g.m(), 3 * 28);
+        let (_, ncomp) = g.components();
+        assert_eq!(ncomp, 3);
+    }
+
+    #[test]
+    fn planted_intra_denser_than_inter() {
+        let g = planted_partition(4, 25, 0.5, 0.01, 7);
+        let mut intra = 0usize;
+        let mut inter = 0usize;
+        for u in 0..g.n() as Vertex {
+            for &v in g.neighbors(u) {
+                if v > u {
+                    if planted_community(u, 25) == planted_community(v, 25) {
+                        intra += 1;
+                    } else {
+                        inter += 1;
+                    }
+                }
+            }
+        }
+        assert!(intra > 4 * inter, "intra={intra} inter={inter}");
+    }
+
+    #[test]
+    fn planted_valid() {
+        planted_partition(5, 10, 0.6, 0.05, 11).validate();
+    }
+}

@@ -1,0 +1,132 @@
+//! The benchmark graph suite — synthetic analogues of the paper's
+//! Table 1 instances, scaled to this testbed (see DESIGN.md §2).
+//!
+//! Family mapping:
+//! - social networks (soc-pokec, soc-LiveJournal1, com-orkut, ...) →
+//!   RMAT with skewed quadrants + BA;
+//! - web crawls (in-2004, uk-2002, indochina-2004, ...) →
+//!   planted-partition (high clustering, high t_max) + Watts–Strogatz;
+//! - as-skitter (extreme wedge/triangle ratio) → star-heavy RMAT;
+//! - cit-Patents (low clustering citation net) → sparse ER + BA mix.
+
+use super::*;
+use crate::graph::Graph;
+
+/// A named suite instance: the graph plus the family tag used in
+/// EXPERIMENTS.md analyses.
+pub struct SuiteGraph {
+    pub name: &'static str,
+    pub family: &'static str,
+    pub graph: Graph,
+}
+
+/// Construct one suite graph by name. `scale` multiplies the base size
+/// (1 = default benchmark size for this box).
+pub fn suite_by_name(name: &str, scale: usize) -> Option<SuiteGraph> {
+    let s = scale.max(1);
+    let g = |name: &'static str, family: &'static str, graph: Graph| {
+        Some(SuiteGraph { name, family, graph })
+    };
+    match name {
+        // citation-network analogue: sparse, moderate clustering
+        "cit-pat" => g("cit-pat", "citation", {
+            let a = erdos_renyi(8_000 * s, 3.2 / (8_000.0 * s as f64), 101);
+            let b = barabasi_albert(8_000 * s, 3, 102);
+            merge(a, b)
+        }),
+        // social-network analogues: skewed RMAT
+        "soc-rmat-s" => g("soc-rmat-s", "social", rmat(8_192 * s, 40_000 * s, 0.57, 0.19, 0.19, 201)),
+        "soc-rmat-m" => g("soc-rmat-m", "social", rmat(16_384 * s, 100_000 * s, 0.57, 0.19, 0.19, 202)),
+        "soc-ba" => g("soc-ba", "social", barabasi_albert(20_000 * s, 8, 203)),
+        // skitter analogue: extreme hub skew → huge wedge/triangle ratio
+        "skitter-like" => g("skitter-like", "internet", rmat(16_384 * s, 60_000 * s, 0.70, 0.14, 0.14, 301)),
+        // web-crawl analogues: high clustering, high trussness
+        "web-pp-s" => g("web-pp-s", "web", planted_partition(160 * s, 24, 0.72, 0.0008, 401)),
+        "web-pp-m" => g("web-pp-m", "web", planted_partition(320 * s, 28, 0.65, 0.0006, 402)),
+        "web-ws" => g("web-ws", "web", watts_strogatz(24_000 * s, 6, 0.08, 403)),
+        // hollywood analogue: overlapping dense cliques
+        "holly-like" => g("holly-like", "collab", {
+            let a = planted_partition(120 * s, 32, 0.85, 0.001, 501);
+            let b = rmat(4_096 * s, 30_000 * s, 0.55, 0.2, 0.2, 502);
+            merge(a, b)
+        }),
+        // uniform random: low clustering baseline
+        "er-sparse" => g("er-sparse", "random", erdos_renyi(30_000 * s, 8.0 / 30_000.0, 601)),
+        _ => None,
+    }
+}
+
+/// All suite names in the canonical (wedge-ordered, like Table 1) order.
+pub const SUITE_NAMES: [&str; 10] = [
+    "cit-pat",
+    "web-pp-s",
+    "er-sparse",
+    "web-ws",
+    "web-pp-m",
+    "soc-ba",
+    "soc-rmat-s",
+    "holly-like",
+    "skitter-like",
+    "soc-rmat-m",
+];
+
+/// Build the full suite at the given scale.
+pub fn suite(scale: usize) -> Vec<SuiteGraph> {
+    SUITE_NAMES
+        .iter()
+        .map(|n| suite_by_name(n, scale).expect("suite name"))
+        .collect()
+}
+
+/// Union of two graphs on max(n_a, n_b) vertices.
+fn merge(a: Graph, b: Graph) -> Graph {
+    use crate::graph::{GraphBuilder, Vertex};
+    let n = a.n().max(b.n());
+    let mut edges = Vec::with_capacity(a.m() + b.m());
+    for g in [&a, &b] {
+        for u in 0..g.n() as Vertex {
+            for &v in g.neighbors(u) {
+                if v > u {
+                    edges.push((u, v));
+                }
+            }
+        }
+    }
+    GraphBuilder::new().num_vertices(n).edges_vec(edges).build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_suite_names_resolve() {
+        for name in SUITE_NAMES {
+            let sg = suite_by_name(name, 1).expect("resolves");
+            assert_eq!(sg.name, name);
+            assert!(sg.graph.m() > 1000, "{name} too small: m={}", sg.graph.m());
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(suite_by_name("nope", 1).is_none());
+    }
+
+    #[test]
+    fn suite_is_deterministic() {
+        let a = suite_by_name("web-pp-s", 1).unwrap();
+        let b = suite_by_name("web-pp-s", 1).unwrap();
+        assert_eq!(a.graph, b.graph);
+    }
+
+    #[test]
+    fn merge_unions_edges() {
+        let a = complete(4);
+        let b = ring(6);
+        let u = merge(a, b);
+        assert_eq!(u.n(), 6);
+        assert!(u.has_edge(0, 3)); // from K4
+        assert!(u.has_edge(4, 5)); // from ring
+    }
+}

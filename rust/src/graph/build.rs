@@ -1,0 +1,143 @@
+//! Graph builder: raw edge tuples → clean CSR.
+//!
+//! Mirrors the paper's preprocessing: directed inputs are made
+//! undirected, self loops and duplicate edges are removed.
+
+use super::{Graph, Vertex};
+
+/// Accumulates raw (possibly directed / duplicated / self-looped) edge
+/// tuples and produces a clean, sorted, symmetric CSR [`Graph`].
+#[derive(Default)]
+pub struct GraphBuilder {
+    edges: Vec<(Vertex, Vertex)>,
+    min_n: usize,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ensure the graph has at least `n` vertices (for isolated tails).
+    pub fn num_vertices(mut self, n: usize) -> Self {
+        self.min_n = self.min_n.max(n);
+        self
+    }
+
+    /// Add a batch of edges.
+    pub fn edges(mut self, es: &[(Vertex, Vertex)]) -> Self {
+        self.edges.extend_from_slice(es);
+        self
+    }
+
+    /// Add one edge.
+    pub fn edge(mut self, u: Vertex, v: Vertex) -> Self {
+        self.edges.push((u, v));
+        self
+    }
+
+    /// Take ownership of an edge vector (avoids a copy for generators).
+    pub fn edges_vec(mut self, mut es: Vec<(Vertex, Vertex)>) -> Self {
+        if self.edges.is_empty() {
+            self.edges = std::mem::take(&mut es);
+        } else {
+            self.edges.append(&mut es);
+        }
+        self
+    }
+
+    /// Build the CSR graph: undirect, drop self loops, dedup, sort.
+    pub fn build(self) -> Graph {
+        let GraphBuilder { edges, min_n } = self;
+        // Canonicalize to u < v, dropping self loops.
+        let mut canon: Vec<(Vertex, Vertex)> = edges
+            .into_iter()
+            .filter(|&(u, v)| u != v)
+            .map(|(u, v)| if u < v { (u, v) } else { (v, u) })
+            .collect();
+        canon.sort_unstable();
+        canon.dedup();
+
+        let n = canon
+            .iter()
+            .map(|&(_, v)| v as usize + 1)
+            .max()
+            .unwrap_or(0)
+            .max(min_n);
+
+        // Counting pass for degrees, then fill.
+        let mut deg = vec![0usize; n];
+        for &(u, v) in &canon {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut xadj = vec![0usize; n + 1];
+        for u in 0..n {
+            xadj[u + 1] = xadj[u] + deg[u];
+        }
+        let mut cursor = xadj[..n].to_vec();
+        let mut adj = vec![0 as Vertex; xadj[n]];
+        for &(u, v) in &canon {
+            adj[cursor[u as usize]] = v;
+            cursor[u as usize] += 1;
+            adj[cursor[v as usize]] = u;
+            cursor[v as usize] += 1;
+        }
+        // canon is sorted by (u,v); pushing in that order leaves each
+        // row's "greater neighbor" suffix sorted, but the "smaller
+        // neighbor" prefix arrives in increasing u order too — rows are
+        // already sorted. Sort anyway defensively (cheap, one pass).
+        for u in 0..n {
+            adj[xadj[u]..xadj[u + 1]].sort_unstable();
+        }
+        Graph::from_csr(xadj, adj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::forall;
+
+    #[test]
+    fn dedup_and_self_loops() {
+        let g = GraphBuilder::new()
+            .edges(&[(0, 1), (1, 0), (0, 1), (2, 2), (1, 2)])
+            .build();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 2); // <0,1> and <1,2>
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(1, 2));
+        assert!(!g.has_edge(2, 2));
+    }
+
+    #[test]
+    fn directed_input_symmetrized() {
+        let g = GraphBuilder::new().edges(&[(3, 1)]).build();
+        assert!(g.has_edge(1, 3));
+        assert!(g.has_edge(3, 1));
+        assert_eq!(g.n(), 4);
+    }
+
+    #[test]
+    fn empty_build() {
+        let g = GraphBuilder::new().build();
+        assert_eq!(g.n(), 0);
+        assert_eq!(g.m(), 0);
+    }
+
+    #[test]
+    fn builder_random_edges_always_valid() {
+        forall("builder-valid", 32, |rng| {
+            let n = rng.range(1, 40);
+            let k = rng.range(0, 120);
+            let mut es = Vec::with_capacity(k);
+            for _ in 0..k {
+                es.push((rng.below(n as u64) as u32, rng.below(n as u64) as u32));
+            }
+            let g = GraphBuilder::new().num_vertices(n).edges_vec(es).build();
+            g.validate(); // full invariant check
+            assert_eq!(g.n(), n.max(g.n()));
+        });
+    }
+}

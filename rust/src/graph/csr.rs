@@ -1,0 +1,238 @@
+//! Compressed sparse row (CSR) storage for a simple undirected graph.
+
+use super::Vertex;
+
+/// A simple undirected graph in CSR form.
+///
+/// Invariants (checked by `debug_validate`, relied upon everywhere):
+/// - `xadj.len() == n + 1`, `xadj[0] == 0`, `xadj[n] == adj.len() == 2m`;
+/// - each adjacency list `adj[xadj[u]..xadj[u+1]]` is strictly increasing
+///   (sorted, no duplicates, no self loops);
+/// - symmetry: `v ∈ N(u) ⇔ u ∈ N(v)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Graph {
+    /// Row offsets, length n+1.
+    pub xadj: Vec<usize>,
+    /// Concatenated sorted adjacency lists, length 2m.
+    pub adj: Vec<Vertex>,
+}
+
+impl Graph {
+    /// Construct from raw CSR arrays. Panics if the shape invariants are
+    /// violated (full symmetry checking is in `debug_validate`).
+    pub fn from_csr(xadj: Vec<usize>, adj: Vec<Vertex>) -> Self {
+        assert!(!xadj.is_empty(), "xadj must have length n+1 >= 1");
+        assert_eq!(xadj[0], 0);
+        assert_eq!(*xadj.last().unwrap(), adj.len());
+        let g = Self { xadj, adj };
+        g.debug_validate();
+        g
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.xadj.len() - 1
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.adj.len() / 2
+    }
+
+    /// Neighbors of `u`, sorted ascending.
+    #[inline]
+    pub fn neighbors(&self, u: Vertex) -> &[Vertex] {
+        &self.adj[self.xadj[u as usize]..self.xadj[u as usize + 1]]
+    }
+
+    /// Degree of `u`.
+    #[inline]
+    pub fn degree(&self, u: Vertex) -> usize {
+        self.xadj[u as usize + 1] - self.xadj[u as usize]
+    }
+
+    /// Maximum degree over all vertices (0 for an empty graph).
+    pub fn max_degree(&self) -> usize {
+        (0..self.n()).map(|u| self.degree(u as Vertex)).max().unwrap_or(0)
+    }
+
+    /// Binary-search membership test: is `<u, v>` an edge?
+    #[inline]
+    pub fn has_edge(&self, u: Vertex, v: Vertex) -> bool {
+        self.neighbors(u).binary_search(&v).is_ok()
+    }
+
+    /// Σ_v d(v)² — the work estimate for ordering-oblivious wedge
+    /// enumeration (Table 2, col Σd(v)²).
+    pub fn sum_deg_sq(&self) -> u64 {
+        (0..self.n())
+            .map(|u| {
+                let d = self.degree(u as Vertex) as u64;
+                d * d
+            })
+            .sum()
+    }
+
+    /// Number of wedges `|∧| = Σ_v d(v)·(d(v)−1)/2` — the paper's primary
+    /// work measure (Table 1 orders graphs by it; GWeps divides by it).
+    pub fn wedge_count(&self) -> u64 {
+        (0..self.n())
+            .map(|u| {
+                let d = self.degree(u as Vertex) as u64;
+                d * (d - 1) / 2
+            })
+            .sum()
+    }
+
+    /// Σ_v d⁺(v)² under the *current* vertex numbering, where
+    /// `d⁺(v) = |{w ∈ N(v) : w > v}|` — the ordering-aware triangle
+    /// counting work estimate (Table 2, cols Σd⁺(v)² KCO/NAT).
+    pub fn sum_deg_plus_sq(&self) -> u64 {
+        (0..self.n())
+            .map(|u| {
+                let nu = self.neighbors(u as Vertex);
+                let split = nu.partition_point(|&w| w <= u as Vertex);
+                let dp = (nu.len() - split) as u64;
+                dp * dp
+            })
+            .sum()
+    }
+
+    /// Expensive O(m log d) structural validation; debug builds only by
+    /// default, also invoked explicitly from tests.
+    pub fn debug_validate(&self) {
+        #[cfg(debug_assertions)]
+        self.validate();
+    }
+
+    /// Full invariant check (sortedness, no self loops/dups, symmetry).
+    pub fn validate(&self) {
+        let n = self.n();
+        for u in 0..n {
+            assert!(self.xadj[u] <= self.xadj[u + 1], "xadj not monotone at {u}");
+            let nu = self.neighbors(u as Vertex);
+            for w in nu.windows(2) {
+                assert!(w[0] < w[1], "adjacency of {u} not strictly increasing");
+            }
+            for &v in nu {
+                assert!((v as usize) < n, "neighbor {v} out of range");
+                assert_ne!(v as usize, u, "self loop at {u}");
+                assert!(
+                    self.neighbors(v).binary_search(&(u as Vertex)).is_ok(),
+                    "asymmetric edge <{u},{v}>"
+                );
+            }
+        }
+    }
+
+    /// Connected components by BFS; returns (component id per vertex,
+    /// number of components). Used for k-truss subgraph extraction.
+    pub fn components(&self) -> (Vec<u32>, usize) {
+        let n = self.n();
+        let mut comp = vec![u32::MAX; n];
+        let mut next_comp = 0u32;
+        let mut queue = std::collections::VecDeque::new();
+        for s in 0..n {
+            if comp[s] != u32::MAX {
+                continue;
+            }
+            comp[s] = next_comp;
+            queue.push_back(s as Vertex);
+            while let Some(u) = queue.pop_front() {
+                for &v in self.neighbors(u) {
+                    if comp[v as usize] == u32::MAX {
+                        comp[v as usize] = next_comp;
+                        queue.push_back(v);
+                    }
+                }
+            }
+            next_comp += 1;
+        }
+        (comp, next_comp as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn triangle() -> Graph {
+        GraphBuilder::new().edges(&[(0, 1), (1, 2), (0, 2)]).build()
+    }
+
+    #[test]
+    fn basic_counts() {
+        let g = triangle();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.max_degree(), 2);
+        assert_eq!(g.wedge_count(), 3);
+        assert_eq!(g.sum_deg_sq(), 12);
+    }
+
+    #[test]
+    fn neighbors_sorted() {
+        let g = GraphBuilder::new().edges(&[(2, 0), (2, 1), (2, 3)]).build();
+        assert_eq!(g.neighbors(2), &[0, 1, 3]);
+        assert_eq!(g.degree(2), 3);
+        assert_eq!(g.degree(0), 1);
+    }
+
+    #[test]
+    fn has_edge_both_directions() {
+        let g = triangle();
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(1, 0));
+        assert!(!g.has_edge(0, 0));
+    }
+
+    #[test]
+    fn deg_plus_sq_path() {
+        // path 0-1-2: d+(0)=1, d+(1)=1, d+(2)=0 → 1+1+0 = 2
+        let g = GraphBuilder::new().edges(&[(0, 1), (1, 2)]).build();
+        assert_eq!(g.sum_deg_plus_sq(), 2);
+    }
+
+    #[test]
+    fn components_two_triangles() {
+        let g = GraphBuilder::new()
+            .edges(&[(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5)])
+            .build();
+        let (comp, k) = g.components();
+        assert_eq!(k, 2);
+        assert_eq!(comp[0], comp[1]);
+        assert_eq!(comp[0], comp[2]);
+        assert_eq!(comp[3], comp[4]);
+        assert_ne!(comp[0], comp[3]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::from_csr(vec![0], vec![]);
+        assert_eq!(g.n(), 0);
+        assert_eq!(g.m(), 0);
+        assert_eq!(g.wedge_count(), 0);
+        let (_, k) = g.components();
+        assert_eq!(k, 0);
+    }
+
+    #[test]
+    fn isolated_vertices() {
+        let g = GraphBuilder::new().num_vertices(5).edges(&[(0, 1)]).build();
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.m(), 1);
+        assert_eq!(g.degree(4), 0);
+        let (_, k) = g.components();
+        assert_eq!(k, 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_csr_rejected() {
+        // xadj end doesn't match adj length
+        let _ = Graph::from_csr(vec![0, 2], vec![1]);
+    }
+}

@@ -1,0 +1,186 @@
+//! The truss-augmented graph representation (Fig. 2 of the paper).
+//!
+//! On top of CSR `(xadj, adj)` four arrays are kept:
+//! - `eid` (len 2m): edge id for each adjacency slot, so both directed
+//!   copies of an undirected edge share one id — this replaces the hash
+//!   table used by WC;
+//! - `eo`  (len n): for each vertex `u`, the absolute index in `adj` of
+//!   the first neighbor greater than `u` (the `N⁺(u)` split point);
+//! - `el`  (len m): the edge list — canonical `(u, v)` with `u < v`;
+//! - support `S` lives *outside* this struct (algorithms own it).
+//!
+//! Space: with 4-byte ids this is the paper's 28m + 8n bytes.
+
+use super::{EdgeId, Graph, Vertex};
+
+/// CSR graph augmented with edge ids for truss computation.
+#[derive(Clone, Debug)]
+pub struct EdgeGraph {
+    pub g: Graph,
+    /// Edge id per adjacency slot (len 2m).
+    pub eid: Vec<EdgeId>,
+    /// Absolute index into `adj` of the first neighbor `> u` (len n).
+    pub eo: Vec<usize>,
+    /// Canonical edge list `(u, v)`, `u < v`, indexed by edge id (len m).
+    pub el: Vec<(Vertex, Vertex)>,
+}
+
+impl EdgeGraph {
+    /// Build the augmented representation. Edge ids are assigned in
+    /// lexicographic `(u, v)` order of the canonical (u < v) edges, which
+    /// also makes `eid` within each `N⁺(u)` range strictly increasing —
+    /// a property the PKT ownership rule exploits.
+    pub fn new(g: Graph) -> Self {
+        let n = g.n();
+        let m = g.m();
+        let mut eid = vec![0 as EdgeId; g.adj.len()];
+        let mut eo = vec![0usize; n];
+        let mut el = Vec::with_capacity(m);
+
+        // First pass: split points and id assignment for the u < v copies.
+        let mut next_id: EdgeId = 0;
+        for u in 0..n {
+            let lo = g.xadj[u];
+            let hi = g.xadj[u + 1];
+            let row = &g.adj[lo..hi];
+            let split = lo + row.partition_point(|&w| w < u as Vertex);
+            eo[u] = split;
+            for j in split..hi {
+                eid[j] = next_id;
+                el.push((u as Vertex, g.adj[j]));
+                next_id += 1;
+            }
+        }
+        debug_assert_eq!(next_id as usize, m);
+
+        // Second pass: mirror ids onto the v > u copies (slots where the
+        // neighbor is smaller than the row vertex). For row v, a slot
+        // holding u < v gets the id of canonical edge (u, v), found by
+        // binary search in u's upper row.
+        for v in 0..n {
+            let lo = g.xadj[v];
+            for j in lo..eo[v] {
+                let u = g.adj[j] as usize;
+                // locate v within N⁺(u)
+                let ulo = eo[u];
+                let uhi = g.xadj[u + 1];
+                let pos = g.adj[ulo..uhi]
+                    .binary_search(&(v as Vertex))
+                    .expect("symmetric edge missing");
+                eid[j] = eid[ulo + pos];
+            }
+        }
+
+        Self { g, eid, eo, el }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.g.n()
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.g.m()
+    }
+
+    /// The edge id of `<u, v>` if present.
+    pub fn edge_id(&self, u: Vertex, v: Vertex) -> Option<EdgeId> {
+        let (a, b) = if u < v { (u, v) } else { (v, u) };
+        let lo = self.eo[a as usize];
+        let hi = self.g.xadj[a as usize + 1];
+        self.g.adj[lo..hi]
+            .binary_search(&b)
+            .ok()
+            .map(|pos| self.eid[lo + pos])
+    }
+
+    /// d⁺(u) — number of neighbors greater than u.
+    #[inline]
+    pub fn deg_plus(&self, u: Vertex) -> usize {
+        self.g.xadj[u as usize + 1] - self.eo[u as usize]
+    }
+
+    /// Full invariant check for tests.
+    pub fn validate(&self) {
+        let n = self.n();
+        let m = self.m();
+        assert_eq!(self.eid.len(), self.g.adj.len());
+        assert_eq!(self.eo.len(), n);
+        assert_eq!(self.el.len(), m);
+        let mut seen = vec![0u8; m];
+        for u in 0..n {
+            let (lo, hi) = (self.g.xadj[u], self.g.xadj[u + 1]);
+            assert!((lo..=hi).contains(&self.eo[u]));
+            for j in lo..hi {
+                let v = self.g.adj[j];
+                let e = self.eid[j] as usize;
+                assert!(e < m, "eid out of range");
+                let (a, b) = self.el[e];
+                let (x, y) = if (u as Vertex) < v { (u as Vertex, v) } else { (v, u as Vertex) };
+                assert_eq!((a, b), (x, y), "el mismatch for slot ({u},{v})");
+                if j >= self.eo[u] {
+                    assert!(v > u as Vertex);
+                    seen[e] += 1;
+                } else {
+                    assert!(v < u as Vertex);
+                }
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "each edge must appear once in upper rows");
+        for e in 0..m {
+            let (u, v) = self.el[e];
+            assert!(u < v);
+            assert_eq!(self.edge_id(u, v), Some(e as EdgeId));
+            assert_eq!(self.edge_id(v, u), Some(e as EdgeId));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::graph::GraphBuilder;
+    use crate::util::forall;
+
+    #[test]
+    fn fig2_style_small_graph() {
+        // n=4, m=5: edges (0,1),(0,2),(0,3),(1,2),(2,3) — like paper Fig. 2
+        let g = GraphBuilder::new()
+            .edges(&[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)])
+            .build();
+        let eg = EdgeGraph::new(g);
+        eg.validate();
+        assert_eq!(eg.m(), 5);
+        // ids assigned lexicographically over canonical edges
+        assert_eq!(eg.edge_id(0, 1), Some(0));
+        assert_eq!(eg.edge_id(0, 2), Some(1));
+        assert_eq!(eg.edge_id(0, 3), Some(2));
+        assert_eq!(eg.edge_id(1, 2), Some(3));
+        assert_eq!(eg.edge_id(2, 3), Some(4));
+        assert_eq!(eg.edge_id(1, 3), None);
+        // eo: vertex 0 has no smaller neighbors → eo[0] == xadj[0]
+        assert_eq!(eg.eo[0], eg.g.xadj[0]);
+        // vertex 3 has only smaller neighbors → eo[3] == xadj[4]
+        assert_eq!(eg.eo[3], eg.g.xadj[4]);
+    }
+
+    #[test]
+    fn deg_plus_sums_to_m() {
+        let g = gen::rmat(256, 1024, 0.57, 0.19, 0.19, 42);
+        let eg = EdgeGraph::new(g);
+        let total: usize = (0..eg.n()).map(|u| eg.deg_plus(u as Vertex)).sum();
+        assert_eq!(total, eg.m());
+    }
+
+    #[test]
+    fn edge_graph_random_always_valid() {
+        forall("edge-graph-valid", 24, |rng| {
+            let n = rng.range(2, 48);
+            let p = rng.f64() * 0.4;
+            let g = gen::erdos_renyi(n, p, rng.next_u64());
+            EdgeGraph::new(g).validate();
+        });
+    }
+}

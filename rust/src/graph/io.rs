@@ -1,0 +1,235 @@
+//! Graph file I/O: whitespace edge lists (SNAP style), MatrixMarket
+//! pattern files (UF collection style), and a fast binary CSR format.
+
+use super::{Graph, GraphBuilder, Vertex};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Magic header for the binary CSR format.
+const BIN_MAGIC: &[u8; 8] = b"TRUSSX01";
+
+/// Parse a SNAP-style edge list: one `u v` pair per line, `#` or `%`
+/// comment lines ignored. Directed inputs are symmetrized; self loops and
+/// duplicates dropped (the paper's preprocessing).
+pub fn parse_edge_list(text: &str) -> Result<Graph> {
+    let mut edges = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let u: Vertex = it
+            .next()
+            .context("missing source vertex")?
+            .parse()
+            .with_context(|| format!("bad source on line {}", lineno + 1))?;
+        let v: Vertex = it
+            .next()
+            .context("missing target vertex")?
+            .parse()
+            .with_context(|| format!("bad target on line {}", lineno + 1))?;
+        edges.push((u, v));
+    }
+    Ok(GraphBuilder::new().edges_vec(edges).build())
+}
+
+/// Read an edge-list file.
+pub fn read_edge_list(path: impl AsRef<Path>) -> Result<Graph> {
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    parse_edge_list(&text)
+}
+
+/// Write a canonical (u < v) edge list.
+pub fn write_edge_list(g: &Graph, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# trussx edge list: n={} m={}", g.n(), g.m())?;
+    for u in 0..g.n() as Vertex {
+        for &v in g.neighbors(u) {
+            if v > u {
+                writeln!(w, "{u} {v}")?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Parse a MatrixMarket coordinate file (pattern or weighted; weights are
+/// ignored). 1-based indices per the MM spec.
+pub fn parse_matrix_market(text: &str) -> Result<Graph> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = lines.next().context("empty MatrixMarket file")?;
+    if !header.starts_with("%%MatrixMarket") {
+        bail!("not a MatrixMarket file (missing %%MatrixMarket header)");
+    }
+    if !header.contains("coordinate") {
+        bail!("only coordinate MatrixMarket supported");
+    }
+    let mut size_seen = false;
+    let mut edges = Vec::new();
+    for line in lines {
+        let line = line.trim();
+        if line.starts_with('%') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        if !size_seen {
+            // rows cols nnz — validated loosely; we derive n from entries.
+            let _rows: usize = it.next().context("bad size line")?.parse()?;
+            let _cols: usize = it.next().context("bad size line")?.parse()?;
+            let _nnz: usize = it.next().context("bad size line")?.parse()?;
+            size_seen = true;
+            continue;
+        }
+        let u: u64 = it.next().context("missing row index")?.parse()?;
+        let v: u64 = it.next().context("missing col index")?.parse()?;
+        if u == 0 || v == 0 {
+            bail!("MatrixMarket indices are 1-based; found 0");
+        }
+        edges.push(((u - 1) as Vertex, (v - 1) as Vertex));
+    }
+    Ok(GraphBuilder::new().edges_vec(edges).build())
+}
+
+/// Read a MatrixMarket file.
+pub fn read_matrix_market(path: impl AsRef<Path>) -> Result<Graph> {
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    parse_matrix_market(&text)
+}
+
+/// Write binary CSR: magic, n, 2m, xadj (u64 LE), adj (u32 LE).
+pub fn write_binary(g: &Graph, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(BIN_MAGIC)?;
+    w.write_all(&(g.n() as u64).to_le_bytes())?;
+    w.write_all(&(g.adj.len() as u64).to_le_bytes())?;
+    for &x in &g.xadj {
+        w.write_all(&(x as u64).to_le_bytes())?;
+    }
+    for &v in &g.adj {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read binary CSR written by [`write_binary`].
+pub fn read_binary(path: impl AsRef<Path>) -> Result<Graph> {
+    let f = std::fs::File::open(&path)
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != BIN_MAGIC {
+        bail!("bad magic: not a trussx binary graph");
+    }
+    let mut buf8 = [0u8; 8];
+    r.read_exact(&mut buf8)?;
+    let n = u64::from_le_bytes(buf8) as usize;
+    r.read_exact(&mut buf8)?;
+    let nadj = u64::from_le_bytes(buf8) as usize;
+    let mut xadj = Vec::with_capacity(n + 1);
+    for _ in 0..=n {
+        r.read_exact(&mut buf8)?;
+        xadj.push(u64::from_le_bytes(buf8) as usize);
+    }
+    let mut adj = Vec::with_capacity(nadj);
+    let mut buf4 = [0u8; 4];
+    for _ in 0..nadj {
+        r.read_exact(&mut buf4)?;
+        adj.push(u32::from_le_bytes(buf4));
+    }
+    Ok(Graph::from_csr(xadj, adj))
+}
+
+/// Load a graph by extension: `.el`/`.txt`/`.edges` → edge list,
+/// `.mtx` → MatrixMarket, `.bin` → binary CSR.
+pub fn read_auto(path: impl AsRef<Path>) -> Result<Graph> {
+    let p = path.as_ref();
+    match p.extension().and_then(|e| e.to_str()) {
+        Some("mtx") => read_matrix_market(p),
+        Some("bin") => read_binary(p),
+        _ => read_edge_list(p),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let g = GraphBuilder::new().edges(&[(0, 1), (1, 2), (0, 2), (2, 3)]).build();
+        let dir = std::env::temp_dir().join("trussx_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.el");
+        write_edge_list(&g, &p).unwrap();
+        let g2 = read_edge_list(&p).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let g = crate::gen::rmat(128, 512, 0.57, 0.19, 0.19, 7);
+        let dir = std::env::temp_dir().join("trussx_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.bin");
+        write_binary(&g, &p).unwrap();
+        let g2 = read_binary(&p).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn edge_list_comments_and_dups() {
+        let g = parse_edge_list("# comment\n% also comment\n0 1\n1 0\n1 1\n1 2\n").unwrap();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 2);
+    }
+
+    #[test]
+    fn edge_list_malformed_rejected() {
+        assert!(parse_edge_list("0 x\n").is_err());
+        assert!(parse_edge_list("0\n").is_err());
+        assert!(parse_edge_list("-1 2\n").is_err());
+    }
+
+    #[test]
+    fn matrix_market_parse() {
+        let mm = "%%MatrixMarket matrix coordinate pattern symmetric\n\
+                  % UF-style comment\n\
+                  3 3 3\n1 2\n2 3\n1 3\n";
+        let g = parse_matrix_market(mm).unwrap();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 3);
+        assert!(g.has_edge(0, 2));
+    }
+
+    #[test]
+    fn matrix_market_weighted_ok() {
+        let mm = "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 2 3.5\n";
+        let g = parse_matrix_market(mm).unwrap();
+        assert_eq!(g.m(), 1);
+    }
+
+    #[test]
+    fn matrix_market_rejects_bad_header() {
+        assert!(parse_matrix_market("not a matrix\n1 1 0\n").is_err());
+        assert!(parse_matrix_market("%%MatrixMarket matrix array real\n").is_err());
+        // 0-based index is invalid
+        let mm = "%%MatrixMarket matrix coordinate pattern general\n2 2 1\n0 1\n";
+        assert!(parse_matrix_market(mm).is_err());
+    }
+
+    #[test]
+    fn binary_bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("trussx_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOTMAGIC0000000000000000").unwrap();
+        assert!(read_binary(&p).is_err());
+    }
+}

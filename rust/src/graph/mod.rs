@@ -1,0 +1,19 @@
+//! Graph substrate: CSR storage, the truss-augmented edge representation
+//! from Fig. 2 of the paper, builders, and file I/O.
+
+mod build;
+mod csr;
+mod edge;
+pub mod io;
+
+pub use build::GraphBuilder;
+pub use csr::Graph;
+pub use edge::EdgeGraph;
+
+/// Vertex id. Graphs in this reproduction are capped well below 2^32
+/// vertices, matching the paper's 4-byte-integer space accounting
+/// (28m + 8n bytes for the truss representation).
+pub type Vertex = u32;
+
+/// Edge id in `[0, m)`. Each undirected edge has exactly one id.
+pub type EdgeId = u32;

@@ -1,0 +1,30 @@
+//! trussx — shared-memory graph truss decomposition (PKT).
+//!
+//! Reproduction of Kabir & Madduri, "Shared-memory Graph Truss
+//! Decomposition" (2017). Three-layer architecture:
+//!
+//! - **L3 (this crate)**: the paper's contribution — the PKT
+//!   level-synchronous parallel truss decomposition, plus every substrate
+//!   it depends on (CSR graph store, generators, k-core decomposition,
+//!   ordering, oriented triangle counting, baselines WC/Ros, a parallel
+//!   runtime with thread-local buffers and barriers, metrics, CLI).
+//! - **L2 (python/compile/model.py)**: dense linear-algebra truss support
+//!   model (Graphulo-style `S = (A·A) ⊙ A`) lowered AOT to HLO text.
+//! - **L1 (python/compile/kernels/)**: Pallas tiled masked-matmul kernel
+//!   called from L2; checked against a pure-jnp oracle.
+//!
+//! The Rust binary loads the AOT artifacts via the `xla` crate (PJRT CPU
+//! client) — Python is never on the request path.
+
+pub mod bench;
+pub mod coordinator;
+pub mod gen;
+pub mod graph;
+pub mod kcore;
+pub mod metrics;
+pub mod order;
+pub mod par;
+pub mod runtime;
+pub mod triangle;
+pub mod truss;
+pub mod util;

@@ -1,0 +1,243 @@
+//! trussx CLI — the leader entrypoint.
+//!
+//! ```text
+//! trussx decompose <graphspec> [--algo pkt|wc|ros|local] [--threads N]
+//!                  [--order nat|deg|kco] [--hist]
+//! trussx stats <graphspec>
+//! trussx bench <id|all> [--scale S] [--threads N]
+//! trussx serve [--addr HOST:PORT]
+//! trussx generate <graphspec> --out FILE[.el|.bin]
+//! ```
+//!
+//! (Arg parsing is hand-rolled: the offline registry carries no clap.)
+
+use anyhow::{anyhow, bail, Context, Result};
+use trussx::coordinator::{run_job, serve, Algorithm, GraphSpec, JobConfig};
+use trussx::graph::{io, EdgeGraph};
+use trussx::kcore;
+use trussx::order::Ordering;
+use trussx::par::Pool;
+use trussx::triangle;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal option scanner: collects `--key value` pairs and positionals.
+struct Opts {
+    positional: Vec<String>,
+    flags: Vec<(String, String)>,
+    switches: Vec<String>,
+}
+
+impl Opts {
+    fn parse(args: &[String], known_switches: &[&str]) -> Result<Self> {
+        let mut positional = vec![];
+        let mut flags = vec![];
+        let mut switches = vec![];
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if known_switches.contains(&key) {
+                    switches.push(key.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .with_context(|| format!("--{key} needs a value"))?;
+                    flags.push((key.to_string(), v.clone()));
+                }
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Self { positional, flags, switches })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "decompose" => cmd_decompose(rest),
+        "query" => cmd_query(rest),
+        "stats" => cmd_stats(rest),
+        "bench" => cmd_bench(rest),
+        "serve" => cmd_serve(rest),
+        "generate" => cmd_generate(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `trussx help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "trussx — shared-memory graph truss decomposition (PKT)\n\n\
+         USAGE:\n  trussx decompose <graphspec> [--algo pkt|wc|ros|local] [--threads N] [--order nat|deg|kco] [--hist]\n  \
+         trussx stats <graphspec>\n  \
+         trussx bench <table1|table2|table3|table4|fig4|fig5|fig6|ablate|xla|all> [--scale S] [--threads N]\n  \
+         trussx query <graphspec> --vertex V [--k K]\n  \
+         trussx serve [--addr HOST:PORT]\n  \
+         trussx generate <graphspec> --out FILE(.el|.bin)\n\n\
+         GRAPH SPECS:\n  suite:<name>  rmat:n=..,m=..  er:n=..,p=..  ba:n=..,k=..\n  \
+         ws:n=..,k=..,beta=..  pp:blocks=..,size=..,pin=..,pout=..\n  complete:n=..  file:/path\n"
+    );
+}
+
+fn cmd_decompose(args: &[String]) -> Result<()> {
+    let o = Opts::parse(args, &["hist"])?;
+    let spec_str = o.positional.first().context("missing graph spec")?;
+    let mut cfg = JobConfig::new(GraphSpec::parse(spec_str)?);
+    if let Some(a) = o.get("algo") {
+        cfg.algorithm = Algorithm::parse(a)?;
+    }
+    if let Some(t) = o.get("threads") {
+        cfg.threads = t.parse().context("bad --threads")?;
+    }
+    if let Some(ord) = o.get("order") {
+        cfg.ordering = Ordering::parse(ord).ok_or_else(|| anyhow!("bad --order '{ord}'"))?;
+    }
+    let report = run_job(&cfg)?;
+    println!("{}", report.summary());
+    println!(
+        "phases: support={:.4}s scan={:.4}s process={:.4}s (levels={}, sublevels={})",
+        report.stats.support_secs,
+        report.stats.scan_secs,
+        report.stats.process_secs,
+        report.stats.levels,
+        report.stats.sublevels
+    );
+    if o.has("hist") {
+        println!("trussness histogram:");
+        for (k, &c) in report.histogram.iter().enumerate() {
+            if c > 0 {
+                println!("  k={k}: {c} edges");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_stats(args: &[String]) -> Result<()> {
+    let o = Opts::parse(args, &[])?;
+    let spec_str = o.positional.first().context("missing graph spec")?;
+    let g = GraphSpec::parse(spec_str)?.build()?;
+    let pool = Pool::with_default_threads();
+    let tri = triangle::count_triangles_par(&g, &pool);
+    let core = kcore::bz(&g);
+    let eg = EdgeGraph::new(g);
+    println!("graph    : {spec_str}");
+    println!("n        : {}", eg.n());
+    println!("m        : {}", eg.m());
+    println!("wedges   : {}", eg.g.wedge_count());
+    println!("triangles: {tri}");
+    println!("dmax     : {}", eg.g.max_degree());
+    println!("cmax     : {}", kcore::max_coreness(&core));
+    println!(
+        "wedge/triangle ratio: {:.2}",
+        eg.g.wedge_count() as f64 / tri.max(1) as f64
+    );
+    Ok(())
+}
+
+fn cmd_bench(args: &[String]) -> Result<()> {
+    let o = Opts::parse(args, &[])?;
+    let id = o.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let scale: usize = o.get("scale").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let threads: usize = o
+        .get("threads")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or_else(Pool::default_threads);
+    let ids: Vec<&str> = if id == "all" {
+        trussx::bench::ALL.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        let report = trussx::bench::run(id, scale, threads)?;
+        println!("{report}\n");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let o = Opts::parse(args, &[])?;
+    let addr = o.get("addr").unwrap_or("127.0.0.1:7077");
+    let handle = serve(addr)?;
+    println!("trussx server listening on {}", handle.addr);
+    println!(
+        "protocol: DECOMP <spec> [algo=..] [threads=..] [order=..] | HIST <spec> | STATUS | QUIT"
+    );
+    // foreground: block forever (Ctrl-C to stop)
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_generate(args: &[String]) -> Result<()> {
+    let o = Opts::parse(args, &[])?;
+    let spec_str = o.positional.first().context("missing graph spec")?;
+    let out = o.get("out").context("missing --out FILE")?;
+    let g = GraphSpec::parse(spec_str)?.build()?;
+    match std::path::Path::new(out).extension().and_then(|e| e.to_str()) {
+        Some("bin") => io::write_binary(&g, out)?,
+        _ => io::write_edge_list(&g, out)?,
+    }
+    println!("wrote {} (n={}, m={})", out, g.n(), g.m());
+    Ok(())
+}
+
+fn cmd_query(args: &[String]) -> Result<()> {
+    let o = Opts::parse(args, &[])?;
+    let spec_str = o.positional.first().context("missing graph spec")?;
+    let q: u32 = o.get("vertex").context("missing --vertex V")?.parse()?;
+    let g = GraphSpec::parse(spec_str)?.build()?;
+    let eg = EdgeGraph::new(g);
+    let pool = Pool::with_default_threads();
+    let res = trussx::truss::pkt(&eg, &pool);
+    let idx = trussx::truss::TrussIndex::new(&eg, res.trussness);
+    match o.get("k") {
+        Some(kstr) => {
+            let k: u32 = kstr.parse().context("bad --k")?;
+            let comm = idx.community(q, k);
+            println!("{k}-truss community of {q}: {} edges", comm.len());
+            for (u, v) in comm.iter().take(50) {
+                println!("  {u} {v}");
+            }
+            if comm.len() > 50 {
+                println!("  ... ({} more)", comm.len() - 50);
+            }
+        }
+        None => {
+            let (k, comm) = idx.closest_community(q);
+            println!(
+                "closest community of {q}: k={k}, {} edges (max_k={})",
+                comm.len(),
+                idx.max_k(q)
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,175 @@
+//! Metrics: wall timers, the paper's GWeps performance rate, and a
+//! plain-text table formatter used by the bench harness to print the
+//! same rows the paper's tables report.
+
+use std::time::Instant;
+
+/// Wall-clock timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Self(Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.secs())
+}
+
+/// Time a closure over `reps` repetitions, returning (last result,
+/// minimum seconds). Minimum-of-N is the standard noise filter for
+/// single-machine benchmarking.
+pub fn time_best<T>(reps: usize, mut f: impl FnMut() -> T) -> (T, f64) {
+    assert!(reps >= 1);
+    let mut best = f64::INFINITY;
+    let mut out = None;
+    for _ in 0..reps {
+        let t = Timer::start();
+        let r = f();
+        best = best.min(t.secs());
+        out = Some(r);
+    }
+    (out.unwrap(), best)
+}
+
+/// Giga-wedges processed per second — the paper's normalized performance
+/// rate (§4.2): wedge count / time / 10⁹.
+pub fn gweps(wedges: u64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return 0.0;
+    }
+    wedges as f64 / secs / 1e9
+}
+
+/// Geometric mean (the paper summarizes rates and speedups this way).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// Column-aligned plain-text table (markdown-ish, paper-table style).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(width) {
+                line.push_str(&format!(" {c:>w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &width));
+        let mut sep = String::from("|");
+        for w in &width {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &width));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gweps_rate() {
+        assert!((gweps(2_000_000_000, 2.0) - 1.0).abs() < 1e-12);
+        assert_eq!(gweps(100, 0.0), 0.0);
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[5.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn timer_measures() {
+        let (out, secs) = time(|| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            42
+        });
+        assert_eq!(out, 42);
+        assert!(secs >= 0.004, "{secs}");
+    }
+
+    #[test]
+    fn time_best_takes_min() {
+        let mut calls = 0;
+        let (_, secs) = time_best(3, || {
+            calls += 1;
+        });
+        assert_eq!(calls, 3);
+        assert!(secs < 0.1);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["graph", "time"]);
+        t.row(vec!["k4".into(), "0.1".into()]);
+        t.row(vec!["big-one".into(), "12.5".into()]);
+        let s = t.render();
+        assert!(s.contains("graph"), "{s}");
+        assert!(s.lines().count() == 4);
+        let widths: Vec<usize> = s.lines().map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "aligned: {s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

@@ -1,0 +1,104 @@
+//! Artifact manifest handling.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt` with one
+//! `name<TAB>filename` line per lowered program (e.g.
+//! `support_64<TAB>support_64.hlo.txt`). The Rust side loads programs by
+//! manifest name so the set of block sizes is decided at compile time by
+//! Python and discovered at run time by Rust.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Parsed `manifest.txt`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// `(name, filename)` pairs in manifest order.
+    pub entries: Vec<(String, String)>,
+}
+
+impl Manifest {
+    /// Read `<dir>/manifest.txt`.
+    pub fn read(dir: impl AsRef<Path>) -> Result<Self> {
+        let path = dir.as_ref().join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((name, file)) = line.split_once('\t') else {
+                bail!("manifest line {} not name<TAB>file: {line:?}", i + 1);
+            };
+            entries.push((name.trim().to_string(), file.trim().to_string()));
+        }
+        Ok(Self { entries })
+    }
+
+    /// Names of all `support_<B>` programs, with their block sizes,
+    /// sorted ascending by block size.
+    pub fn support_blocks(&self) -> Vec<usize> {
+        let mut blocks: Vec<usize> = self
+            .entries
+            .iter()
+            .filter_map(|(n, _)| n.strip_prefix("support_").and_then(|b| b.parse().ok()))
+            .collect();
+        blocks.sort_unstable();
+        blocks
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.entries.iter().any(|(n, _)| n == name)
+    }
+}
+
+/// Locate the artifacts directory: `$TRUSSX_ARTIFACTS` wins; otherwise
+/// walk up from the current directory looking for `artifacts/manifest.txt`
+/// (so tests and examples work from any workspace subdirectory).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("TRUSSX_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.txt").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse("# comment\nsupport_64\tsupport_64.hlo.txt\npeel_64\tpeel_64.hlo.txt\nsupport_128\tsupport_128.hlo.txt\n").unwrap();
+        assert_eq!(m.entries.len(), 3);
+        assert_eq!(m.support_blocks(), vec![64, 128]);
+        assert!(m.has("peel_64"));
+        assert!(!m.has("peel_256"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(Manifest::parse("no-tab-here\n").is_err());
+    }
+
+    #[test]
+    fn parse_empty_ok() {
+        let m = Manifest::parse("").unwrap();
+        assert!(m.entries.is_empty());
+        assert!(m.support_blocks().is_empty());
+    }
+}

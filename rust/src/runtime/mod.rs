@@ -1,0 +1,150 @@
+//! PJRT runtime — loads the AOT artifacts produced by `make artifacts`
+//! (`python/compile/aot.py`) and executes them from the Rust hot path.
+//!
+//! Interchange format is **HLO text**, not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md). Python never runs at request time — the
+//! binary is self-contained once `artifacts/` exists.
+
+mod artifacts;
+
+pub use artifacts::{default_artifacts_dir, Manifest};
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled-executable registry over one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, executables: HashMap::new() })
+    }
+
+    /// Platform string (e.g. "cpu") — surfaced in server status.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load one HLO-text artifact and register it under `name`.
+    pub fn load_hlo_text(&mut self, name: &str, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load every artifact listed in `<dir>/manifest.txt` (written by
+    /// aot.py: one `name<TAB>filename` per line).
+    pub fn load_manifest(&mut self, dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let manifest = Manifest::read(dir)?;
+        for (name, file) in &manifest.entries {
+            self.load_hlo_text(name, dir.join(file))?;
+        }
+        Ok(manifest)
+    }
+
+    /// Names of loaded executables.
+    pub fn names(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute `name` with the given input literals; returns the output
+    /// tuple elements (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("no artifact named '{name}' loaded"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow!("untupling result of {name}: {e:?}"))
+    }
+
+    /// Convenience: execute and return each output as an `f32` vector.
+    pub fn execute_f32(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        self.execute(name, inputs)?
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// Build an `f32[rows*cols]` literal with the given shape.
+pub fn literal_matrix(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(data.len(), rows * cols);
+    xla::Literal::vec1(data)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar(x: f32) -> xla::Literal {
+    xla::Literal::from(x)
+}
+
+/// Locate the artifacts directory: `$TRUSSX_ARTIFACTS`, else
+/// `./artifacts` relative to the current dir, else next to the binary.
+pub fn artifacts_dir() -> PathBuf {
+    default_artifacts_dir()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need compiled artifacts live in
+    // rust/tests/xla_integration.rs (they require `make artifacts`).
+    // Here: client creation and error paths only.
+
+    #[test]
+    fn cpu_client_boots() {
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        assert_eq!(rt.platform().to_lowercase(), "cpu");
+        assert!(rt.names().is_empty());
+    }
+
+    #[test]
+    fn missing_executable_errors() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.execute("nope", &[]).is_err());
+        assert!(!rt.has("nope"));
+    }
+
+    #[test]
+    fn missing_artifact_file_errors() {
+        let mut rt = Runtime::cpu().unwrap();
+        assert!(rt.load_hlo_text("x", "/nonexistent/path.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn literal_matrix_shape() {
+        let l = literal_matrix(&[1.0, 2.0, 3.0, 4.0], 2, 2).unwrap();
+        assert_eq!(l.element_count(), 4);
+    }
+}

@@ -1,0 +1,302 @@
+//! Triangle counting and edge-support computation.
+//!
+//! - [`count_triangles`] / [`count_triangles_par`] — oriented triangle
+//!   counting (the `N⁺` canonical form u < v < w), the Table 2 baseline;
+//! - [`support_am4`] — the paper's Alg. 3: parallel support computation
+//!   with a thread-local marking array and three atomic adds per triangle;
+//! - [`support_ros`] — Rossi's Alg. 2: edge-based support computation,
+//!   Θ(Σ d(u)+d(v)) work, no orientation;
+//! - [`support_naive`] — serial sorted-merge oracle used by tests.
+
+use crate::graph::{EdgeGraph, Graph, Vertex};
+use crate::par::{Counter, Pool, CHUNK_SUPPORT};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// Serial oriented triangle count: Σ_u Σ_{v ∈ N⁺(u)} |N⁺(u) ∩ N⁺(v)|
+/// by sorted merge. Exact, allocation-free.
+pub fn count_triangles(g: &Graph) -> u64 {
+    let mut total = 0u64;
+    for u in 0..g.n() as Vertex {
+        let nu = g.neighbors(u);
+        let su = nu.partition_point(|&w| w <= u);
+        let nu_plus = &nu[su..];
+        for &v in nu_plus {
+            let nv = g.neighbors(v);
+            let sv = nv.partition_point(|&w| w <= v);
+            total += merge_count(nu_plus, &nv[sv..]);
+        }
+    }
+    total
+}
+
+#[inline]
+fn merge_count(a: &[Vertex], b: &[Vertex]) -> u64 {
+    let (mut i, mut j, mut c) = (0usize, 0usize, 0u64);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                c += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    c
+}
+
+/// Parallel oriented triangle counting with per-thread marking arrays —
+/// exactly the AM4 loop structure (Alg. 3) minus the edge-id
+/// bookkeeping and atomics, so its work is Θ(m + Σ_v d⁺(v)²) and
+/// Table 2's ordering experiment measures what the paper measured.
+pub fn count_triangles_par(g: &Graph, pool: &Pool) -> u64 {
+    let n = g.n();
+    let total = AtomicU64::new(0);
+    let counter = Counter::new();
+    pool.region(|ctx| {
+        // X[w] marks w ∈ N⁺(u) for the u being processed
+        let mut x = vec![false; n];
+        let mut local = 0u64;
+        ctx.for_dynamic(&counter, n, CHUNK_SUPPORT, |ui| {
+            let u = ui as Vertex;
+            let nu = g.neighbors(u);
+            let split = nu.partition_point(|&w| w <= u);
+            let (nu_minus, nu_plus) = nu.split_at(split);
+            if nu_minus.is_empty() || nu_plus.is_empty() {
+                return;
+            }
+            for &w in nu_plus {
+                x[w as usize] = true;
+            }
+            // canonical triangle v < u < w: v ∈ N⁻(u), w ∈ N⁺(v) ∩ N⁺(u)
+            for &v in nu_minus {
+                let nv = g.neighbors(v);
+                for &w in nv.iter().rev() {
+                    if w <= u {
+                        break;
+                    }
+                    if x[w as usize] {
+                        local += 1;
+                    }
+                }
+            }
+            for &w in nu_plus {
+                x[w as usize] = false;
+            }
+        });
+        total.fetch_add(local, Ordering::Relaxed);
+    });
+    total.into_inner()
+}
+
+/// The paper's Alg. 3 (AM4): parallel edge-support computation over the
+/// truss-augmented representation. Returns `S` (one entry per edge id):
+/// the number of triangles containing each edge.
+///
+/// For every vertex `u`, its `N⁺(u)` is marked in the thread-local `X`
+/// with the adjacency slot (`j+1`, so 0 means unmarked). Each `v ∈ N⁻(u)`
+/// is then intersected against the marks through `N⁺(v)`, discovering
+/// each triangle exactly once in the canonical form `v < u < w`, and the
+/// three member edges get one atomic increment each.
+pub fn support_am4(eg: &EdgeGraph, pool: &Pool) -> Vec<AtomicU32> {
+    let n = eg.n();
+    let m = eg.m();
+    let g = &eg.g;
+    let s: Vec<AtomicU32> = (0..m).map(|_| AtomicU32::new(0)).collect();
+    let counter = Counter::new();
+    pool.region(|ctx| {
+        // X[w] = slot+1 of w within u's adjacency, 0 if unmarked
+        let mut x = vec![0usize; n];
+        ctx.for_dynamic(&counter, n, CHUNK_SUPPORT, |ui| {
+            let u = ui as Vertex;
+            let (lo, hi) = (g.xadj[ui], g.xadj[ui + 1]);
+            let eo_u = eg.eo[ui];
+            // mark N⁺(u)
+            for j in eo_u..hi {
+                x[g.adj[j] as usize] = j + 1;
+            }
+            // for each v ∈ N⁻(u), scan N⁺(v) descending while w > u
+            for j in lo..eo_u {
+                let v = g.adj[j] as usize;
+                let e_vu = eg.eid[j];
+                for k in (eg.eo[v]..g.xadj[v + 1]).rev() {
+                    let w = g.adj[k];
+                    if w <= u {
+                        break;
+                    }
+                    let xw = x[w as usize];
+                    if xw == 0 {
+                        continue;
+                    }
+                    let e_vw = eg.eid[k];
+                    let e_uw = eg.eid[xw - 1];
+                    s[e_vw as usize].fetch_add(1, Ordering::Relaxed);
+                    s[e_vu as usize].fetch_add(1, Ordering::Relaxed);
+                    s[e_uw as usize].fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            // unmark
+            for j in eo_u..hi {
+                x[g.adj[j] as usize] = 0;
+            }
+        });
+    });
+    s
+}
+
+/// Rossi's Alg. 2: edge-based parallel support computation. Each thread
+/// processes whole edges, so `S[e]` needs no atomics; the cost is the
+/// orientation-oblivious Θ(Σ_e d(u)+d(v)) work bound.
+pub fn support_ros(eg: &EdgeGraph, pool: &Pool) -> Vec<u32> {
+    let n = eg.n();
+    let m = eg.m();
+    let g = &eg.g;
+    // S entries are disjointly owned per edge; use plain u32 behind
+    // unsafe-free atomic stores via AtomicU32 (cheap, uncontended).
+    let s: Vec<AtomicU32> = (0..m).map(|_| AtomicU32::new(0)).collect();
+    let counter = Counter::new();
+    pool.region(|ctx| {
+        let mut x = vec![false; n];
+        ctx.for_dynamic(&counter, m, CHUNK_SUPPORT, |e| {
+            let (u, v) = eg.el[e];
+            // canonical: scan the lower-degree endpoint's neighborhood
+            let (a, b) = if g.degree(u) <= g.degree(v) { (u, v) } else { (v, u) };
+            for &w in g.neighbors(a) {
+                x[w as usize] = true;
+            }
+            let mut cnt = 0u32;
+            for &w in g.neighbors(b) {
+                if w != a && x[w as usize] {
+                    cnt += 1;
+                }
+            }
+            // a itself was marked; b ∈ N(a) so x[b] is set but w ranges
+            // over N(b) which never contains b; exclude w == a above.
+            s[e].store(cnt, Ordering::Relaxed);
+            for &w in g.neighbors(a) {
+                x[w as usize] = false;
+            }
+        });
+    });
+    s.into_iter().map(|a| a.into_inner()).collect()
+}
+
+/// Serial merge-based oracle: S[e] = |N(u) ∩ N(v)| for e = <u, v>.
+pub fn support_naive(eg: &EdgeGraph) -> Vec<u32> {
+    let g = &eg.g;
+    eg.el
+        .iter()
+        .map(|&(u, v)| merge_count(g.neighbors(u), g.neighbors(v)) as u32)
+        .collect()
+}
+
+/// Convert an atomic support vector into plain u32s (after a region).
+pub fn into_plain(s: Vec<AtomicU32>) -> Vec<u32> {
+    s.into_iter().map(|a| a.into_inner()).collect()
+}
+
+/// Triangle count from a support vector: Σ S[e] / 3.
+pub fn triangles_from_support(s: &[u32]) -> u64 {
+    s.iter().map(|&x| x as u64).sum::<u64>() / 3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::graph::GraphBuilder;
+    use crate::util::forall;
+
+    #[test]
+    fn triangle_count_k4() {
+        assert_eq!(count_triangles(&gen::complete(4)), 4);
+        assert_eq!(count_triangles(&gen::complete(6)), 20);
+    }
+
+    #[test]
+    fn triangle_count_triangle_free() {
+        assert_eq!(count_triangles(&gen::ring(8)), 0);
+        assert_eq!(count_triangles(&gen::star(9)), 0);
+        assert_eq!(count_triangles(&gen::grid2d(4, 5)), 0);
+    }
+
+    #[test]
+    fn parallel_count_matches_serial() {
+        forall("tri-par-eq", 12, |rng| {
+            let n = rng.range(2, 100);
+            let g = gen::erdos_renyi(n, 0.15, rng.next_u64());
+            let serial = count_triangles(&g);
+            for t in [1, 2, 4] {
+                assert_eq!(count_triangles_par(&g, &Pool::new(t)), serial);
+            }
+        });
+    }
+
+    #[test]
+    fn am4_support_k4() {
+        // every edge of K4 is in exactly 2 triangles
+        let eg = EdgeGraph::new(gen::complete(4));
+        let s = into_plain(support_am4(&eg, &Pool::new(1)));
+        assert!(s.iter().all(|&x| x == 2), "{s:?}");
+    }
+
+    #[test]
+    fn am4_matches_naive() {
+        forall("am4-eq-naive", 16, |rng| {
+            let n = rng.range(2, 80);
+            let g = gen::erdos_renyi(n, 0.2, rng.next_u64());
+            let eg = EdgeGraph::new(g);
+            let oracle = support_naive(&eg);
+            for t in [1, 2, 4] {
+                let s = into_plain(support_am4(&eg, &Pool::new(t)));
+                assert_eq!(s, oracle, "t={t}");
+            }
+        });
+    }
+
+    #[test]
+    fn ros_matches_naive() {
+        forall("ros-eq-naive", 16, |rng| {
+            let n = rng.range(2, 80);
+            let g = gen::erdos_renyi(n, 0.2, rng.next_u64());
+            let eg = EdgeGraph::new(g);
+            let oracle = support_naive(&eg);
+            for t in [1, 4] {
+                assert_eq!(support_ros(&eg, &Pool::new(t)), oracle, "t={t}");
+            }
+        });
+    }
+
+    #[test]
+    fn support_consistent_with_triangle_count() {
+        let g = gen::rmat(1024, 6_000, 0.57, 0.19, 0.19, 21);
+        let tri = count_triangles(&g);
+        let eg = EdgeGraph::new(g);
+        let s = into_plain(support_am4(&eg, &Pool::new(2)));
+        assert_eq!(triangles_from_support(&s), tri);
+    }
+
+    #[test]
+    fn support_on_shared_edge() {
+        // two triangles sharing edge (1,2): S[<1,2>] = 2, others 1
+        let g = GraphBuilder::new()
+            .edges(&[(0, 1), (0, 2), (1, 2), (1, 3), (2, 3)])
+            .build();
+        let eg = EdgeGraph::new(g);
+        let s = support_naive(&eg);
+        let e12 = eg.edge_id(1, 2).unwrap() as usize;
+        assert_eq!(s[e12], 2);
+        let e01 = eg.edge_id(0, 1).unwrap() as usize;
+        assert_eq!(s[e01], 1);
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        let eg = EdgeGraph::new(GraphBuilder::new().build());
+        assert!(support_naive(&eg).is_empty());
+        assert!(into_plain(support_am4(&eg, &Pool::new(2))).is_empty());
+        let eg1 = EdgeGraph::new(GraphBuilder::new().edge(0, 1).build());
+        assert_eq!(into_plain(support_am4(&eg1, &Pool::new(2))), vec![0]);
+    }
+}

@@ -1,0 +1,153 @@
+//! Cohen's original maximal-k-truss algorithm (paper ref [8]) for a
+//! *fixed* k — the historical baseline the decomposition generalizes.
+//!
+//! Repeatedly removes edges with support < k−2, then returns the
+//! surviving subgraph's connected components: the maximal k-trusses.
+//! Unlike the decomposition (which labels every edge), this answers the
+//! single-k query directly — useful when only one cohesion level is
+//! needed, and the reference point for the `ktruss_components` API.
+
+use crate::graph::{EdgeGraph, Vertex};
+
+/// Maximal k-trusses by Cohen's peel-to-fixpoint: returns per-component
+/// edge lists (canonical u < v), like [`super::ktruss_components`].
+pub fn cohen_ktruss(eg: &EdgeGraph, k: u32) -> Vec<Vec<(Vertex, Vertex)>> {
+    let g = &eg.g;
+    let m = eg.m();
+    let need = k.saturating_sub(2);
+    let mut alive = vec![true; m];
+    let mut support = crate::triangle::support_naive(eg);
+
+    // queue-driven peel: seed with edges under threshold. `queued`
+    // deduplicates; an edge only becomes dead (`alive = false`) when it
+    // is *processed*, so each destroyed triangle decrements its third
+    // edge exactly once.
+    let mut queued = vec![false; m];
+    let mut queue: Vec<usize> = (0..m).filter(|&e| support[e] < need).collect();
+    for &e in &queue {
+        queued[e] = true;
+    }
+    let mut head = 0;
+    while head < queue.len() {
+        let e = queue[head];
+        head += 1;
+        alive[e] = false;
+        let (u, v) = eg.el[e];
+        // every triangle through (u, v) loses this edge: decrement the
+        // other two edges' supports
+        let (ulo, uhi) = (g.xadj[u as usize], g.xadj[u as usize + 1]);
+        let (vlo, vhi) = (g.xadj[v as usize], g.xadj[v as usize + 1]);
+        let (mut i, mut j) = (ulo, vlo);
+        while i < uhi && j < vhi {
+            match g.adj[i].cmp(&g.adj[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    let e3 = eg.eid[i] as usize; // <u, w>
+                    let e2 = eg.eid[j] as usize; // <v, w>
+                    i += 1;
+                    j += 1;
+                    if alive[e2] && alive[e3] {
+                        for f in [e2, e3] {
+                            if support[f] > 0 {
+                                support[f] -= 1;
+                            }
+                            if !queued[f] && support[f] < need {
+                                queued[f] = true;
+                                queue.push(f);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // connected components over surviving edges
+    let kept: Vec<(Vertex, Vertex)> = (0..m).filter(|&e| alive[e]).map(|e| eg.el[e]).collect();
+    if kept.is_empty() {
+        return vec![];
+    }
+    let sub = crate::graph::GraphBuilder::new()
+        .num_vertices(eg.n())
+        .edges_vec(kept.clone())
+        .build();
+    let (comp, ncomp) = sub.components();
+    let mut out = vec![Vec::new(); ncomp];
+    for &(u, v) in &kept {
+        out[comp[u as usize] as usize].push((u, v));
+    }
+    out.retain(|c| !c.is_empty());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::graph::GraphBuilder;
+    use crate::par::Pool;
+    use crate::truss;
+    use crate::util::forall;
+
+    #[test]
+    fn cohen_k4_on_complete_graph() {
+        let eg = EdgeGraph::new(gen::complete(6));
+        // K6 is a 6-truss: it survives any k <= 6
+        for k in [2u32, 4, 6] {
+            let t = cohen_ktruss(&eg, k);
+            assert_eq!(t.len(), 1, "k={k}");
+            assert_eq!(t[0].len(), 15);
+        }
+        assert!(cohen_ktruss(&eg, 7).is_empty());
+    }
+
+    #[test]
+    fn cohen_matches_decomposition_components() {
+        forall("cohen-eq-decomp", 12, |rng| {
+            let n = rng.range(6, 60);
+            let g = gen::erdos_renyi(n, 0.25, rng.next_u64());
+            let eg = EdgeGraph::new(g);
+            let res = truss::pkt(&eg, &Pool::new(2));
+            let tmax = truss::max_trussness(&res.trussness);
+            for k in 3..=tmax {
+                let a = {
+                    let mut c = cohen_ktruss(&eg, k);
+                    for comp in &mut c {
+                        comp.sort_unstable();
+                    }
+                    c.sort();
+                    c
+                };
+                let b = {
+                    let mut c = truss::ktruss_components(&eg, &res.trussness, k);
+                    for comp in &mut c {
+                        comp.sort_unstable();
+                    }
+                    c.sort();
+                    c
+                };
+                assert_eq!(a, b, "k={k}");
+            }
+        });
+    }
+
+    #[test]
+    fn cohen_bridge_graph() {
+        // two triangles + bridge: 3-truss = the two triangles
+        let g = GraphBuilder::new()
+            .edges(&[(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5), (2, 3)])
+            .build();
+        let eg = EdgeGraph::new(g);
+        let t3 = cohen_ktruss(&eg, 3);
+        assert_eq!(t3.len(), 2);
+        let t2 = cohen_ktruss(&eg, 2);
+        assert_eq!(t2.len(), 1); // everything survives, one component
+    }
+
+    #[test]
+    fn cohen_empty_inputs() {
+        let eg = EdgeGraph::new(GraphBuilder::new().build());
+        assert!(cohen_ktruss(&eg, 3).is_empty());
+    }
+}

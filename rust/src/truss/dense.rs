@@ -1,0 +1,137 @@
+//! Dense-block truss decomposition through the AOT XLA artifacts — the
+//! Graphulo-style linear-algebra formulation (paper ref [20]) the stack's
+//! L1/L2 layers implement: support is `S = (A·A) ⊙ A` (a Pallas tiled
+//! masked matmul), peeling zeroes edges below threshold.
+//!
+//! Used two ways:
+//! 1. an **independent correctness oracle** for PKT (different algorithm,
+//!    different layer, different numerics path);
+//! 2. a dense-subgraph support backend for graphs that fit one block.
+//!
+//! Python never runs here: the HLO was lowered once by `make artifacts`.
+
+use crate::graph::EdgeGraph;
+use crate::runtime::{literal_matrix, literal_scalar, Manifest, Runtime};
+use anyhow::{bail, Context, Result};
+
+/// Dense XLA backend bound to one block size `B` (graph must satisfy
+/// n ≤ B).
+pub struct DenseBackend<'rt> {
+    rt: &'rt Runtime,
+    pub block: usize,
+}
+
+impl<'rt> DenseBackend<'rt> {
+    /// Pick the smallest available block ≥ n from the manifest.
+    pub fn for_graph(rt: &'rt Runtime, manifest: &Manifest, n: usize) -> Result<Self> {
+        let block = manifest
+            .support_blocks()
+            .into_iter()
+            .find(|&b| b >= n)
+            .with_context(|| {
+                format!(
+                    "no artifact block >= n={n} (available: {:?})",
+                    manifest.support_blocks()
+                )
+            })?;
+        if !manifest.has(&format!("peel_{block}")) {
+            bail!("manifest has support_{block} but no peel_{block}");
+        }
+        Ok(Self { rt, block })
+    }
+
+    /// Explicit block size (must be loaded in the runtime).
+    pub fn with_block(rt: &'rt Runtime, block: usize) -> Self {
+        Self { rt, block }
+    }
+
+    /// Dense symmetric 0/1 adjacency, padded to B×B.
+    fn dense_adjacency(&self, eg: &EdgeGraph) -> Result<Vec<f32>> {
+        let b = self.block;
+        if eg.n() > b {
+            bail!("graph n={} exceeds dense block {b}", eg.n());
+        }
+        let mut a = vec![0f32; b * b];
+        for &(u, v) in &eg.el {
+            a[u as usize * b + v as usize] = 1.0;
+            a[v as usize * b + u as usize] = 1.0;
+        }
+        Ok(a)
+    }
+
+    /// Edge-support via the `support_B` artifact: one XLA call computing
+    /// `S = (A·A) ⊙ A`; the (u,v) entry is the triangle count of <u,v>.
+    pub fn support(&self, eg: &EdgeGraph) -> Result<Vec<u32>> {
+        let b = self.block;
+        let a = self.dense_adjacency(eg)?;
+        let name = format!("support_{b}");
+        let out = self
+            .rt
+            .execute_f32(&name, &[literal_matrix(&a, b, b)?])?;
+        let s = &out[0];
+        Ok(eg
+            .el
+            .iter()
+            .map(|&(u, v)| s[u as usize * b + v as usize].round() as u32)
+            .collect())
+    }
+
+    /// Full truss decomposition by iterated XLA peeling. Edges that
+    /// disappear at threshold `k−1` have trussness exactly `k`.
+    ///
+    /// Two modes (EXPERIMENTS.md §Perf): with a `peelfix_B` artifact the
+    /// per-k fixpoint runs **in-device** (`lax.while_loop` in the L2
+    /// model — one PJRT call per k); otherwise each inner step is one
+    /// `peel_B` call (`A' = A ⊙ [(A·A) ⊙ A ≥ thresh]`).
+    pub fn decompose(&self, eg: &EdgeGraph) -> Result<Vec<u32>> {
+        let b = self.block;
+        let m = eg.m();
+        let mut a = self.dense_adjacency(eg)?;
+        let mut truss = vec![2u32; m];
+        let mut live = m;
+        let mut k = 2u32;
+        let peel = format!("peel_{b}");
+        let peelfix = format!("peelfix_{b}");
+        let fused = self.rt.has(&peelfix);
+        // safety valve: trussness is bounded by n, and every outer round
+        // with no removals advances k, so ≤ n + t_max iterations total.
+        let max_iters = 4 * (b + m + 4);
+        let mut iters = 0usize;
+        while live > 0 {
+            loop {
+                iters += 1;
+                if iters > max_iters {
+                    bail!("dense peel failed to converge (iters > {max_iters})");
+                }
+                let name = if fused { &peelfix } else { &peel };
+                let out = self.rt.execute_f32(
+                    name,
+                    &[literal_matrix(&a, b, b)?, literal_scalar((k - 1) as f32)],
+                )?;
+                let a_new = &out[0];
+                let mut removed = 0usize;
+                for (e, &(u, v)) in eg.el.iter().enumerate() {
+                    let idx = u as usize * b + v as usize;
+                    if a[idx] != 0.0 && a_new[idx] == 0.0 {
+                        truss[e] = k;
+                        removed += 1;
+                    }
+                }
+                if removed == 0 {
+                    break;
+                }
+                live -= removed;
+                a.copy_from_slice(a_new);
+                // the fused program already reached the per-k fixpoint
+                if live == 0 || fused {
+                    break;
+                }
+            }
+            k += 1;
+        }
+        Ok(truss)
+    }
+}
+
+// NOTE: tests for this module live in rust/tests/xla_integration.rs —
+// they need `make artifacts` to have produced the HLO files first.

@@ -1,0 +1,213 @@
+//! Bounded-memory truss listing — Wang & Cheng's external-memory
+//! bottom-up and top-down algorithms (paper §2, ref [16]).
+//!
+//! The originals stream partitions from disk; here the "memory" budget
+//! bounds the *working subgraph* (edges materialized at once), which is
+//! what the algorithms actually economize. Both prune with the trussness
+//! upper bound `ub(e) = min(S₀(e) + 2, core(u) + 1, core(v) + 1)`
+//! (initial support bounds the trussness; a k-truss lives inside the
+//! (k−1)-core):
+//!
+//! - **bottom-up** lists the k-classes for k = 2, 3, … — each round
+//!   materializes only edges with `ub ≥ k`, which shrinks as k grows;
+//! - **top-down** answers "give me the k_q-truss for a large k_q"
+//!   directly: it materializes only edges with `ub ≥ k_q`, never the
+//!   full graph — the paper's observation that top-down is preferable
+//!   when only high-k trusses are wanted.
+
+use crate::graph::{EdgeGraph, GraphBuilder, Vertex};
+use crate::kcore;
+
+/// Statistics from a bounded-memory run (for the budget assertions and
+/// the external-memory trade-off bench).
+#[derive(Clone, Debug, Default)]
+pub struct ExternalStats {
+    /// Largest number of edges materialized at once.
+    pub peak_edges: usize,
+    /// Total edges loaded across all rounds (I/O proxy).
+    pub edges_loaded: usize,
+    /// Rounds (subgraph constructions) performed.
+    pub rounds: usize,
+}
+
+/// Trussness upper bound per edge.
+fn upper_bounds(eg: &EdgeGraph) -> Vec<u32> {
+    let core = kcore::bz(&eg.g);
+    let s0 = crate::triangle::support_naive(eg);
+    eg.el
+        .iter()
+        .zip(&s0)
+        .map(|(&(u, v), &s)| {
+            (s + 2)
+                .min(core[u as usize] + 1)
+                .min(core[v as usize] + 1)
+        })
+        .collect()
+}
+
+/// Peel the subgraph on `edges` to its k-truss; returns surviving edges.
+fn ktruss_of_subgraph(
+    n: usize,
+    edges: Vec<(Vertex, Vertex)>,
+    k: u32,
+) -> Vec<(Vertex, Vertex)> {
+    if edges.is_empty() {
+        return edges;
+    }
+    let sub = GraphBuilder::new().num_vertices(n).edges_vec(edges).build();
+    let sub_eg = EdgeGraph::new(sub);
+    super::cohen_ktruss(&sub_eg, k).into_iter().flatten().collect()
+}
+
+/// Bottom-up listing: returns the trussness of every edge (equal to the
+/// decomposition) while never materializing more than the `ub ≥ k`
+/// subgraph per round. Errors if any round exceeds `budget_edges`.
+pub fn bottom_up(
+    eg: &EdgeGraph,
+    budget_edges: usize,
+) -> Result<(Vec<u32>, ExternalStats), String> {
+    let m = eg.m();
+    let ub = upper_bounds(eg);
+    let mut trussness = vec![2u32; m];
+    let mut stats = ExternalStats::default();
+    let kmax = ub.iter().copied().max().unwrap_or(2);
+    for k in 3..=kmax {
+        // working set: edges that could still be in a k-truss
+        let cand: Vec<(Vertex, Vertex)> = (0..m)
+            .filter(|&e| ub[e] >= k)
+            .map(|e| eg.el[e])
+            .collect();
+        stats.rounds += 1;
+        stats.edges_loaded += cand.len();
+        stats.peak_edges = stats.peak_edges.max(cand.len());
+        if cand.len() > budget_edges {
+            return Err(format!(
+                "round k={k}: working set {} exceeds budget {budget_edges}",
+                cand.len()
+            ));
+        }
+        if cand.is_empty() {
+            break;
+        }
+        let survivors = ktruss_of_subgraph(eg.n(), cand, k);
+        // surviving edges have trussness >= k
+        for (u, v) in survivors {
+            let e = eg.edge_id(u, v).expect("edge") as usize;
+            trussness[e] = k;
+        }
+    }
+    Ok((trussness, stats))
+}
+
+/// Top-down query: the maximal k_q-truss edge set, materializing only
+/// the `ub ≥ k_q` candidates. Returns (edges, stats).
+pub fn top_down(
+    eg: &EdgeGraph,
+    k_q: u32,
+    budget_edges: usize,
+) -> Result<(Vec<(Vertex, Vertex)>, ExternalStats), String> {
+    let m = eg.m();
+    let ub = upper_bounds(eg);
+    let cand: Vec<(Vertex, Vertex)> = (0..m)
+        .filter(|&e| ub[e] >= k_q)
+        .map(|e| eg.el[e])
+        .collect();
+    let stats = ExternalStats {
+        peak_edges: cand.len(),
+        edges_loaded: cand.len(),
+        rounds: 1,
+    };
+    if cand.len() > budget_edges {
+        return Err(format!(
+            "working set {} exceeds budget {budget_edges}",
+            cand.len()
+        ));
+    }
+    Ok((ktruss_of_subgraph(eg.n(), cand, k_q), stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::par::Pool;
+    use crate::truss;
+    use crate::util::forall;
+
+    #[test]
+    fn bottom_up_matches_pkt() {
+        forall("external-bottomup", 10, |rng| {
+            let n = rng.range(6, 60);
+            let g = gen::erdos_renyi(n, 0.25, rng.next_u64());
+            let eg = EdgeGraph::new(g);
+            let (t, stats) = bottom_up(&eg, usize::MAX).unwrap();
+            let p = truss::pkt(&eg, &Pool::new(2)).trussness;
+            assert_eq!(t, p);
+            assert!(stats.peak_edges <= eg.m());
+        });
+    }
+
+    #[test]
+    fn top_down_matches_components() {
+        let g = gen::planted_partition(3, 14, 0.85, 0.02, 6);
+        let eg = EdgeGraph::new(g);
+        let res = truss::pkt(&eg, &Pool::new(2));
+        let tmax = truss::max_trussness(&res.trussness);
+        let (edges, stats) = top_down(&eg, tmax, usize::MAX).unwrap();
+        let mut want: Vec<(Vertex, Vertex)> = truss::ktruss_components(&eg, &res.trussness, tmax)
+            .into_iter()
+            .flatten()
+            .collect();
+        let mut got = edges;
+        want.sort_unstable();
+        got.sort_unstable();
+        assert_eq!(got, want);
+        // the top-down working set is a strict subset of the graph
+        assert!(stats.peak_edges < eg.m());
+    }
+
+    #[test]
+    fn top_down_touches_less_for_high_k() {
+        // the paper's trade-off: querying only a high-k truss loads far
+        // fewer edges than a full bottom-up listing
+        let g = gen::planted_partition(4, 16, 0.8, 0.01, 7);
+        let eg = EdgeGraph::new(g);
+        let res = truss::pkt(&eg, &Pool::new(2));
+        let tmax = truss::max_trussness(&res.trussness);
+        let (_, td) = top_down(&eg, tmax, usize::MAX).unwrap();
+        let (_, bu) = bottom_up(&eg, usize::MAX).unwrap();
+        assert!(
+            td.edges_loaded < bu.edges_loaded / 2,
+            "top-down {} vs bottom-up {}",
+            td.edges_loaded,
+            bu.edges_loaded
+        );
+    }
+
+    #[test]
+    fn budget_enforced() {
+        let eg = EdgeGraph::new(gen::complete(12));
+        assert!(bottom_up(&eg, 5).is_err());
+        assert!(top_down(&eg, 3, 5).is_err());
+        assert!(top_down(&eg, 3, 100).is_ok());
+    }
+
+    #[test]
+    fn shrinking_working_set() {
+        // bottom-up rounds must be monotone non-increasing in size
+        let g = gen::barabasi_albert(150, 4, 8);
+        let eg = EdgeGraph::new(g);
+        let (_, stats) = bottom_up(&eg, usize::MAX).unwrap();
+        assert!(stats.rounds >= 1);
+        assert!(stats.peak_edges <= eg.m());
+    }
+
+    #[test]
+    fn empty_graph() {
+        let eg = EdgeGraph::new(crate::graph::GraphBuilder::new().build());
+        let (t, _) = bottom_up(&eg, 10).unwrap();
+        assert!(t.is_empty());
+        let (e, _) = top_down(&eg, 3, 10).unwrap();
+        assert!(e.is_empty());
+    }
+}

@@ -1,0 +1,190 @@
+//! Local truss decomposition by h-index iteration — the
+//! synchronization-free alternative the paper discusses in §2
+//! (Sariyüce, Seshadhri & Pinar [19]; the truss analogue of the MPM
+//! k-core update rule [34]).
+//!
+//! Every edge repeatedly replaces its estimate ρ(e) with the h-index of
+//! `{ min(ρ(f), ρ(g)) : (e, f, g) ∈ triangles }`. Starting from the
+//! initial supports, the estimates decrease monotonically to the
+//! trussness−2 fixpoint. Not work-efficient (each triangle is touched
+//! every round) but embarrassingly parallel — no frontier, no ownership
+//! rule, just a barrier per round.
+
+use crate::graph::EdgeGraph;
+use crate::par::{Counter, Pool, CHUNK_PROCESS};
+use crate::triangle::support_am4;
+use crate::truss::{PktStats, TrussResult};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Run the local algorithm. `max_rounds` caps the iteration count
+/// (usually converges in far fewer; the cap guards pathological inputs —
+/// convergence is reached when a full round changes nothing).
+pub fn local(eg: &EdgeGraph, pool: &Pool, max_rounds: u32) -> TrussResult {
+    let t0 = Instant::now();
+    let n = eg.n();
+    let m = eg.m();
+    let g = &eg.g;
+
+    let rho: Vec<AtomicU32> = support_am4(eg, pool);
+    let support_secs = t0.elapsed().as_secs_f64();
+    let rho_new: Vec<AtomicU32> = (0..m).map(|_| AtomicU32::new(0)).collect();
+    let changed = AtomicBool::new(true);
+    let rounds = AtomicU64::new(0);
+    let counter = Counter::new();
+
+    pool.region(|ctx| {
+        let mut x = vec![0usize; n];
+        let mut vals: Vec<u32> = Vec::new();
+        let mut round = 0u32;
+        loop {
+            if !changed.load(Ordering::Acquire) || round >= max_rounds {
+                break;
+            }
+            ctx.barrier();
+            if ctx.tid == 0 {
+                changed.store(false, Ordering::Release);
+                counter.reset();
+                rounds.fetch_add(1, Ordering::Relaxed);
+            }
+            ctx.barrier();
+            ctx.for_dynamic(&counter, m, CHUNK_PROCESS, |e1| {
+                let (u, v) = eg.el[e1];
+                vals.clear();
+                let (ulo, uhi) = (g.xadj[u as usize], g.xadj[u as usize + 1]);
+                for j in ulo..uhi {
+                    x[g.adj[j] as usize] = j + 1;
+                }
+                let (vlo, vhi) = (g.xadj[v as usize], g.xadj[v as usize + 1]);
+                for j in vlo..vhi {
+                    let w = g.adj[j];
+                    if w == u {
+                        continue;
+                    }
+                    let xw = x[w as usize];
+                    if xw == 0 {
+                        continue;
+                    }
+                    let e2 = eg.eid[j] as usize;
+                    let e3 = eg.eid[xw - 1] as usize;
+                    vals.push(
+                        rho[e2]
+                            .load(Ordering::Relaxed)
+                            .min(rho[e3].load(Ordering::Relaxed)),
+                    );
+                }
+                for j in ulo..uhi {
+                    x[g.adj[j] as usize] = 0;
+                }
+                let h = h_index(&mut vals);
+                let old = rho[e1].load(Ordering::Relaxed);
+                let new = h.min(old); // monotone non-increasing
+                rho_new[e1].store(new, Ordering::Relaxed);
+                if new != old {
+                    changed.store(true, Ordering::Release);
+                }
+            });
+            ctx.barrier();
+            // commit the round (static copy)
+            ctx.for_static(m, |e| {
+                rho[e].store(rho_new[e].load(Ordering::Relaxed), Ordering::Relaxed);
+            });
+            ctx.barrier();
+            round += 1;
+        }
+    });
+
+    let total = t0.elapsed().as_secs_f64();
+    TrussResult {
+        trussness: rho
+            .iter()
+            .map(|a| a.load(Ordering::Relaxed) + 2)
+            .collect(),
+        stats: PktStats {
+            support_secs,
+            process_secs: total - support_secs,
+            total_secs: total,
+            levels: rounds.into_inner() as u32, // rounds, for reporting
+            ..Default::default()
+        },
+    }
+}
+
+/// h-index of a value multiset: the largest h such that at least h
+/// values are ≥ h. Sorts descending in place.
+fn h_index(vals: &mut [u32]) -> u32 {
+    vals.sort_unstable_by(|a, b| b.cmp(a));
+    let mut h = 0u32;
+    for (i, &v) in vals.iter().enumerate() {
+        if v as usize > i {
+            h = (i + 1) as u32;
+        } else {
+            break;
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::graph::GraphBuilder;
+    use crate::truss::pkt;
+    use crate::util::forall;
+
+    #[test]
+    fn h_index_basics() {
+        assert_eq!(h_index(&mut []), 0);
+        assert_eq!(h_index(&mut [0]), 0);
+        assert_eq!(h_index(&mut [1]), 1);
+        assert_eq!(h_index(&mut [5]), 1);
+        assert_eq!(h_index(&mut [1, 1, 1]), 1);
+        assert_eq!(h_index(&mut [2, 2, 2]), 2);
+        assert_eq!(h_index(&mut [3, 2, 1]), 2);
+        assert_eq!(h_index(&mut [10, 10, 10, 10]), 4);
+    }
+
+    #[test]
+    fn local_complete_graph() {
+        let eg = EdgeGraph::new(gen::complete(7));
+        let t = local(&eg, &Pool::new(2), 1000).trussness;
+        assert!(t.iter().all(|&x| x == 7));
+    }
+
+    #[test]
+    fn local_matches_pkt() {
+        forall("local-eq-pkt", 10, |rng| {
+            let n = rng.range(4, 60);
+            let g = gen::erdos_renyi(n, 0.25, rng.next_u64());
+            let eg = EdgeGraph::new(g);
+            let l = local(&eg, &Pool::new(2), 10_000).trussness;
+            let p = pkt(&eg, &Pool::new(2)).trussness;
+            assert_eq!(l, p);
+        });
+    }
+
+    #[test]
+    fn local_clustered() {
+        let g = gen::planted_partition(3, 14, 0.8, 0.02, 8);
+        let eg = EdgeGraph::new(g);
+        assert_eq!(
+            local(&eg, &Pool::new(4), 10_000).trussness,
+            pkt(&eg, &Pool::new(1)).trussness
+        );
+    }
+
+    #[test]
+    fn local_reports_rounds() {
+        let g = gen::planted_partition(2, 12, 0.9, 0.05, 2);
+        let eg = EdgeGraph::new(g);
+        let res = local(&eg, &Pool::new(2), 1000);
+        assert!(res.stats.levels >= 1, "at least one round");
+    }
+
+    #[test]
+    fn local_empty() {
+        let eg = EdgeGraph::new(GraphBuilder::new().build());
+        assert!(local(&eg, &Pool::new(1), 10).trussness.is_empty());
+    }
+}

@@ -1,0 +1,159 @@
+//! Truss-based community search — the paper's §1 application [14]
+//! (Huang et al., "Approximate closest community search in networks"):
+//! given a query vertex and a cohesion level k, return the k-truss
+//! community containing it, i.e. the connected component of the k-truss
+//! subgraph that touches the query vertex.
+//!
+//! Built on a precomputed decomposition, queries are answered by a BFS
+//! restricted to edges with trussness ≥ k — no re-peeling.
+
+use crate::graph::{EdgeGraph, Vertex};
+use std::collections::VecDeque;
+
+/// A queryable index over a truss decomposition.
+pub struct TrussIndex<'g> {
+    eg: &'g EdgeGraph,
+    trussness: Vec<u32>,
+}
+
+impl<'g> TrussIndex<'g> {
+    pub fn new(eg: &'g EdgeGraph, trussness: Vec<u32>) -> Self {
+        assert_eq!(trussness.len(), eg.m());
+        Self { eg, trussness }
+    }
+
+    /// Trussness of the edge `<u, v>` (None if not an edge).
+    pub fn edge_trussness(&self, u: Vertex, v: Vertex) -> Option<u32> {
+        self.eg.edge_id(u, v).map(|e| self.trussness[e as usize])
+    }
+
+    /// Maximum k such that `q` has at least one incident edge of
+    /// trussness ≥ k (the vertex's maximum cohesion level).
+    pub fn max_k(&self, q: Vertex) -> u32 {
+        let g = &self.eg.g;
+        let (lo, hi) = (g.xadj[q as usize], g.xadj[q as usize + 1]);
+        (lo..hi)
+            .map(|j| self.trussness[self.eg.eid[j] as usize])
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// The k-truss community of query vertex `q`: edges of the connected
+    /// component (through trussness ≥ k edges) containing `q`. Empty if
+    /// `q` touches no such edge.
+    pub fn community(&self, q: Vertex, k: u32) -> Vec<(Vertex, Vertex)> {
+        let g = &self.eg.g;
+        let n = self.eg.n();
+        if (q as usize) >= n {
+            return vec![];
+        }
+        let mut visited = vec![false; n];
+        let mut out = Vec::new();
+        let mut seen_edge = vec![false; self.eg.m()];
+        let mut queue = VecDeque::new();
+        visited[q as usize] = true;
+        queue.push_back(q);
+        while let Some(u) = queue.pop_front() {
+            let (lo, hi) = (g.xadj[u as usize], g.xadj[u as usize + 1]);
+            for j in lo..hi {
+                let e = self.eg.eid[j] as usize;
+                if self.trussness[e] < k {
+                    continue;
+                }
+                let v = g.adj[j];
+                if !seen_edge[e] {
+                    seen_edge[e] = true;
+                    out.push(self.eg.el[e]);
+                }
+                if !visited[v as usize] {
+                    visited[v as usize] = true;
+                    queue.push_back(v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Any-k community search (the "closest community" flavor): the
+    /// community of `q` at the highest k where it is non-empty.
+    pub fn closest_community(&self, q: Vertex) -> (u32, Vec<(Vertex, Vertex)>) {
+        let k = self.max_k(q);
+        if k < 2 {
+            return (0, vec![]);
+        }
+        (k, self.community(q, k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::par::Pool;
+    use crate::truss;
+
+    fn index(g: crate::graph::Graph) -> (EdgeGraph, Vec<u32>) {
+        let eg = EdgeGraph::new(g);
+        let t = truss::pkt(&eg, &Pool::new(2)).trussness;
+        (eg, t)
+    }
+
+    #[test]
+    fn community_of_planted_block() {
+        // 3 blocks of K10 with no noise: community of any vertex at high
+        // k is exactly its block
+        let (eg, t) = index(gen::planted_partition(3, 10, 1.0, 0.0, 1));
+        let idx = TrussIndex::new(&eg, t);
+        let comm = idx.community(5, 10);
+        assert_eq!(comm.len(), 45, "K10 has 45 edges");
+        assert!(comm.iter().all(|&(u, v)| u < 10 && v < 10));
+        // vertex from block 2
+        let comm2 = idx.community(25, 10);
+        assert!(comm2.iter().all(|&(u, v)| (20..30).contains(&u) && (20..30).contains(&v)));
+    }
+
+    #[test]
+    fn community_respects_k() {
+        // two triangles joined by a bridge: at k=3 the community of 0 is
+        // its own triangle; at k=2 it spans everything
+        let g = crate::graph::GraphBuilder::new()
+            .edges(&[(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5), (2, 3)])
+            .build();
+        let (eg, t) = index(g);
+        let idx = TrussIndex::new(&eg, t);
+        assert_eq!(idx.community(0, 3).len(), 3);
+        assert_eq!(idx.community(0, 2).len(), 7);
+        assert_eq!(idx.community(4, 3).len(), 3);
+        assert!(idx.community(0, 4).is_empty());
+    }
+
+    #[test]
+    fn max_k_and_closest() {
+        let (eg, t) = index(gen::complete(6));
+        let idx = TrussIndex::new(&eg, t);
+        assert_eq!(idx.max_k(0), 6);
+        let (k, comm) = idx.closest_community(3);
+        assert_eq!(k, 6);
+        assert_eq!(comm.len(), 15);
+    }
+
+    #[test]
+    fn isolated_or_invalid_vertex() {
+        let g = crate::graph::GraphBuilder::new().num_vertices(4).edge(0, 1).build();
+        let (eg, t) = index(g);
+        let idx = TrussIndex::new(&eg, t);
+        assert!(idx.community(3, 2).is_empty()); // isolated vertex
+        assert!(idx.community(99, 2).is_empty()); // out of range
+        assert_eq!(idx.max_k(3), 0);
+        assert_eq!(idx.closest_community(3).0, 0);
+    }
+
+    #[test]
+    fn edge_trussness_lookup() {
+        let (eg, t) = index(gen::complete(4));
+        let idx = TrussIndex::new(&eg, t);
+        assert_eq!(idx.edge_trussness(0, 1), Some(4));
+        assert_eq!(idx.edge_trussness(1, 0), Some(4));
+        assert_eq!(idx.edge_trussness(0, 0), None);
+    }
+}

@@ -1,0 +1,147 @@
+//! Ros — Rossi's truss decomposition (PAKDD 2014), as characterized in
+//! §2 of the paper: only the support-computation phase is parallel
+//! (Alg. 2, edge-based, orientation-oblivious); the peel itself is the
+//! serial ascending-support sweep, but over the hash-free edge-id
+//! representation (Fig. 2) rather than WC's hash table.
+
+use crate::graph::{EdgeGraph, EdgeId};
+use crate::par::Pool;
+use crate::triangle::support_ros;
+use crate::truss::{PktStats, TrussResult};
+use std::time::Instant;
+
+/// Run Ros: parallel support (Alg. 2) + serial hash-free peeling.
+pub fn ros(eg: &EdgeGraph, pool: &Pool) -> TrussResult {
+    let t0 = Instant::now();
+    let g = &eg.g;
+    let n = eg.n();
+    let m = eg.m();
+
+    let mut s = support_ros(eg, pool);
+    let support_secs = t0.elapsed().as_secs_f64();
+
+    // counting-sort bucket structure (same as WC)
+    let smax = s.iter().copied().max().unwrap_or(0) as usize;
+    let mut bin = vec![0usize; smax + 2];
+    for &x in &s {
+        bin[x as usize + 1] += 1;
+    }
+    for d in 0..=smax {
+        bin[d + 1] += bin[d];
+    }
+    let mut vert = vec![0 as EdgeId; m];
+    let mut pos = vec![0usize; m];
+    {
+        let mut cursor = bin.clone();
+        for e in 0..m {
+            let d = s[e] as usize;
+            pos[e] = cursor[d];
+            vert[pos[e]] = e as EdgeId;
+            cursor[d] += 1;
+        }
+    }
+
+    let mut processed = vec![false; m];
+    let mut x = vec![0usize; n]; // marking array, replaces the hash table
+
+    for i in 0..m {
+        let e = vert[i] as usize;
+        let k = s[e];
+        let (u, v) = eg.el[e];
+        // mark N(u) with slot+1
+        let (ulo, uhi) = (g.xadj[u as usize], g.xadj[u as usize + 1]);
+        for j in ulo..uhi {
+            x[g.adj[j] as usize] = j + 1;
+        }
+        let (vlo, vhi) = (g.xadj[v as usize], g.xadj[v as usize + 1]);
+        for j in vlo..vhi {
+            let w = g.adj[j];
+            if w == u {
+                continue;
+            }
+            let xw = x[w as usize];
+            if xw == 0 {
+                continue;
+            }
+            let e2 = eg.eid[j] as usize; // <v, w>
+            let e3 = eg.eid[xw - 1] as usize; // <u, w>
+            if processed[e2] || processed[e3] {
+                continue;
+            }
+            for f in [e2, e3] {
+                if s[f] > k {
+                    let sf = s[f] as usize;
+                    let pf = pos[f];
+                    let pw = bin[sf];
+                    let w2 = vert[pw] as usize;
+                    if f != w2 {
+                        vert.swap(pf, pw);
+                        pos[f] = pw;
+                        pos[w2] = pf;
+                    }
+                    bin[sf] += 1;
+                    s[f] -= 1;
+                }
+            }
+        }
+        for j in ulo..uhi {
+            x[g.adj[j] as usize] = 0;
+        }
+        processed[e] = true;
+    }
+
+    let total = t0.elapsed().as_secs_f64();
+    TrussResult {
+        trussness: s.iter().map(|&x| x + 2).collect(),
+        stats: PktStats {
+            support_secs,
+            process_secs: total - support_secs,
+            total_secs: total,
+            ..Default::default()
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::graph::GraphBuilder;
+    use crate::truss::{pkt, wc};
+    use crate::util::forall;
+
+    #[test]
+    fn ros_complete_graph() {
+        let eg = EdgeGraph::new(gen::complete(6));
+        let t = ros(&eg, &Pool::new(2)).trussness;
+        assert!(t.iter().all(|&x| x == 6));
+    }
+
+    #[test]
+    fn ros_matches_pkt_and_wc() {
+        forall("ros-eq-all", 12, |rng| {
+            let n = rng.range(4, 70);
+            let g = gen::erdos_renyi(n, 0.25, rng.next_u64());
+            let eg = EdgeGraph::new(g);
+            let r = ros(&eg, &Pool::new(2)).trussness;
+            assert_eq!(r, pkt(&eg, &Pool::new(2)).trussness);
+            assert_eq!(r, wc(&eg).trussness);
+        });
+    }
+
+    #[test]
+    fn ros_clustered_graph() {
+        let g = gen::planted_partition(3, 16, 0.8, 0.02, 4);
+        let eg = EdgeGraph::new(g);
+        assert_eq!(
+            ros(&eg, &Pool::new(4)).trussness,
+            pkt(&eg, &Pool::new(4)).trussness
+        );
+    }
+
+    #[test]
+    fn ros_empty() {
+        let eg = EdgeGraph::new(GraphBuilder::new().build());
+        assert!(ros(&eg, &Pool::new(1)).trussness.is_empty());
+    }
+}

@@ -1,0 +1,146 @@
+//! WC — Wang & Cheng's serial truss decomposition (Alg. 1).
+//!
+//! The sequential baseline: support computation, a counting-sort bucket
+//! structure for O(1) edge reordering (the Batagelj–Zaversnik trick
+//! applied to edges), and a **hash table** for edge membership/lookup —
+//! the very overhead PKT's edge-id representation eliminates. The hash
+//! table here is `std::collections::HashMap`, faithful to the paper's
+//! characterization of WC's cost profile.
+
+use crate::graph::{EdgeGraph, EdgeId, Vertex};
+use crate::truss::{PktStats, TrussResult};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Run WC. Serial by definition (step 6 of Alg. 1 is inherently
+/// sequential: edges must be extracted in ascending-support order).
+pub fn wc(eg: &EdgeGraph) -> TrussResult {
+    let t0 = Instant::now();
+    let g = &eg.g;
+    let m = eg.m();
+
+    // --- support computation (serial merge-based) ---
+    let mut s: Vec<u32> = crate::triangle::support_naive(eg);
+    let support_secs = t0.elapsed().as_secs_f64();
+
+    // --- hash table over live edges: (min, max) -> edge id ---
+    let mut eh: HashMap<(Vertex, Vertex), EdgeId> = HashMap::with_capacity(m * 2);
+    for (e, &(u, v)) in eg.el.iter().enumerate() {
+        eh.insert((u, v), e as EdgeId);
+    }
+    let key = |a: Vertex, b: Vertex| if a < b { (a, b) } else { (b, a) };
+
+    // --- counting-sort bucket structure over supports ---
+    let smax = s.iter().copied().max().unwrap_or(0) as usize;
+    let mut bin = vec![0usize; smax + 2];
+    for &x in &s {
+        bin[x as usize + 1] += 1;
+    }
+    for d in 0..=smax {
+        bin[d + 1] += bin[d];
+    }
+    let mut vert = vec![0 as EdgeId; m]; // edges in support order
+    let mut pos = vec![0usize; m];
+    {
+        let mut cursor = bin.clone();
+        for e in 0..m {
+            let d = s[e] as usize;
+            pos[e] = cursor[d];
+            vert[pos[e]] = e as EdgeId;
+            cursor[d] += 1;
+        }
+    }
+
+    // decrement edge f's support by one bucket (only while above k)
+    let decrement = |f: usize, k: u32, s: &mut Vec<u32>, vert: &mut Vec<EdgeId>,
+                         pos: &mut Vec<usize>, bin: &mut Vec<usize>| {
+        if s[f] > k {
+            let sf = s[f] as usize;
+            let pf = pos[f];
+            let pw = bin[sf];
+            let w = vert[pw] as usize;
+            if f != w {
+                vert.swap(pf, pw);
+                pos[f] = pw;
+                pos[w] = pf;
+            }
+            bin[sf] += 1;
+            s[f] -= 1;
+        }
+    };
+
+    // --- peel in ascending support order ---
+    for i in 0..m {
+        let e = vert[i] as usize;
+        let k = s[e];
+        let (u, v) = eg.el[e];
+        // canonical: iterate the smaller-degree endpoint
+        let (a, b) = if g.degree(u) <= g.degree(v) { (u, v) } else { (v, u) };
+        for &w in g.neighbors(a) {
+            if w == b {
+                continue;
+            }
+            // triangle a-b-w exists iff both <b,w> and <a,w> are live
+            let Some(&e_bw) = eh.get(&key(b, w)) else { continue };
+            let Some(&e_aw) = eh.get(&key(a, w)) else { continue };
+            decrement(e_aw as usize, k, &mut s, &mut vert, &mut pos, &mut bin);
+            decrement(e_bw as usize, k, &mut s, &mut vert, &mut pos, &mut bin);
+        }
+        eh.remove(&key(u, v));
+    }
+
+    let total = t0.elapsed().as_secs_f64();
+    TrussResult {
+        trussness: s.iter().map(|&x| x + 2).collect(),
+        stats: PktStats {
+            support_secs,
+            process_secs: total - support_secs,
+            total_secs: total,
+            ..Default::default()
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::graph::GraphBuilder;
+    use crate::par::Pool;
+    use crate::truss::pkt;
+    use crate::util::forall;
+
+    #[test]
+    fn wc_complete_graph() {
+        for n in [3usize, 5, 8] {
+            let eg = EdgeGraph::new(gen::complete(n));
+            let t = wc(&eg).trussness;
+            assert!(t.iter().all(|&x| x as usize == n));
+        }
+    }
+
+    #[test]
+    fn wc_matches_pkt() {
+        forall("wc-eq-pkt", 12, |rng| {
+            let n = rng.range(4, 70);
+            let g = gen::erdos_renyi(n, 0.25, rng.next_u64());
+            let eg = EdgeGraph::new(g);
+            assert_eq!(wc(&eg).trussness, pkt(&eg, &Pool::new(2)).trussness);
+        });
+    }
+
+    #[test]
+    fn wc_matches_pkt_clustered() {
+        let g = gen::planted_partition(4, 14, 0.75, 0.02, 9);
+        let eg = EdgeGraph::new(g);
+        assert_eq!(wc(&eg).trussness, pkt(&eg, &Pool::new(4)).trussness);
+    }
+
+    #[test]
+    fn wc_empty_and_single_edge() {
+        let eg = EdgeGraph::new(GraphBuilder::new().build());
+        assert!(wc(&eg).trussness.is_empty());
+        let eg = EdgeGraph::new(GraphBuilder::new().edge(0, 1).build());
+        assert_eq!(wc(&eg).trussness, vec![2]);
+    }
+}

@@ -1,0 +1,182 @@
+//! Cross-module integration tests: the full pipeline over generated and
+//! file-loaded graphs, cross-algorithm agreement at scale, the paper's
+//! worked example, and the coordinator server under concurrent load.
+
+use trussx::coordinator::{run_job, serve, Algorithm, Client, GraphSpec, JobConfig};
+use trussx::gen;
+use trussx::graph::{io, EdgeGraph, GraphBuilder};
+use trussx::kcore;
+use trussx::order::{self, Ordering};
+use trussx::par::Pool;
+use trussx::truss;
+
+/// The paper's Figure 1 properties on a faithful instance: all
+/// coreness 3 is not reproducible with two disjoint triangles, so use
+/// the figure's actual structure — two dense blocks (each a K4) joined
+/// by a single edge: coreness 3 everywhere, bridge trussness 2, block
+/// edges trussness 4, two maximal k-trusses for k = 3.
+#[test]
+fn fig1_example_core_and_truss() {
+    let mut edges = vec![];
+    for base in [0u32, 4] {
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                edges.push((base + i, base + j));
+            }
+        }
+    }
+    edges.push((3, 4)); // bridge
+    let g = GraphBuilder::new().edges_vec(edges).build();
+    let core = kcore::bz(&g);
+    assert!(core.iter().all(|&c| c == 3), "coreness: {core:?}");
+    let eg = EdgeGraph::new(g);
+    let res = truss::pkt(&eg, &Pool::new(2));
+    let bridge = eg.edge_id(3, 4).unwrap() as usize;
+    assert_eq!(res.trussness[bridge], 2);
+    for (e, &t) in res.trussness.iter().enumerate() {
+        if e != bridge {
+            assert_eq!(t, 4, "edge {e}");
+        }
+    }
+    let trusses = truss::ktruss_components(&eg, &res.trussness, 3);
+    assert_eq!(trusses.len(), 2, "two maximal 3-trusses (the two K4s)");
+}
+
+/// All four algorithms agree edge-for-edge on every suite graph family
+/// (subsampled sizes to keep test time bounded).
+#[test]
+fn all_algorithms_agree_across_families() {
+    let graphs = vec![
+        ("rmat", gen::rmat(512, 3000, 0.57, 0.19, 0.19, 5)),
+        ("er", gen::erdos_renyi(600, 0.015, 6)),
+        ("ba", gen::barabasi_albert(500, 4, 7)),
+        ("ws", gen::watts_strogatz(400, 4, 0.1, 8)),
+        ("pp", gen::planted_partition(6, 18, 0.7, 0.01, 9)),
+    ];
+    for (name, g) in graphs {
+        let (g, _) = order::reorder(&g, Ordering::KCore);
+        let eg = EdgeGraph::new(g);
+        let p1 = truss::pkt(&eg, &Pool::new(1)).trussness;
+        let p4 = truss::pkt(&eg, &Pool::new(4)).trussness;
+        let w = truss::wc(&eg).trussness;
+        let r = truss::ros(&eg, &Pool::new(2)).trussness;
+        let l = truss::local(&eg, &Pool::new(2), 1_000_000).trussness;
+        assert_eq!(p1, p4, "{name}: pkt thread invariance");
+        assert_eq!(p1, w, "{name}: pkt vs wc");
+        assert_eq!(p1, r, "{name}: pkt vs ros");
+        assert_eq!(p1, l, "{name}: pkt vs local");
+    }
+}
+
+/// Ordering changes edge ids but never the trussness multiset, and the
+/// per-edge values map through the permutation.
+#[test]
+fn ordering_permutes_trussness_consistently() {
+    let g = gen::rmat(256, 1500, 0.6, 0.18, 0.18, 11);
+    let eg_nat = EdgeGraph::new(g.clone());
+    let res_nat = truss::pkt(&eg_nat, &Pool::new(2));
+    let (gk, perm) = order::reorder(&g, Ordering::KCore);
+    let eg_kco = EdgeGraph::new(gk);
+    let res_kco = truss::pkt(&eg_kco, &Pool::new(2));
+    for (e, &(u, v)) in eg_nat.el.iter().enumerate() {
+        let (pu, pv) = (perm[u as usize], perm[v as usize]);
+        let e2 = eg_kco.edge_id(pu, pv).expect("edge survives relabel") as usize;
+        assert_eq!(res_nat.trussness[e], res_kco.trussness[e2]);
+    }
+    let _ = res_kco;
+}
+
+/// Round-trip through file I/O preserves decomposition results.
+#[test]
+fn file_roundtrip_preserves_decomposition() {
+    let g = gen::planted_partition(3, 12, 0.8, 0.02, 12);
+    let dir = std::env::temp_dir().join("trussx_itest");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("g.el");
+    io::write_edge_list(&g, &p).unwrap();
+    let g2 = io::read_edge_list(&p).unwrap();
+    assert_eq!(g, g2);
+    let t1 = truss::pkt(&EdgeGraph::new(g), &Pool::new(2)).trussness;
+    let t2 = truss::pkt(&EdgeGraph::new(g2), &Pool::new(2)).trussness;
+    assert_eq!(t1, t2);
+}
+
+/// The k-truss/k-core containment theorem (Cohen): every edge of a
+/// k-truss has both endpoints in the (k−1)-core.
+#[test]
+fn ktruss_subset_of_kcore() {
+    let g = gen::rmat(512, 4000, 0.57, 0.19, 0.19, 13);
+    let core = kcore::bz(&g);
+    let eg = EdgeGraph::new(g);
+    let res = truss::pkt(&eg, &Pool::new(2));
+    for (e, &(u, v)) in eg.el.iter().enumerate() {
+        let t = res.trussness[e];
+        assert!(
+            core[u as usize] + 1 >= t && core[v as usize] + 1 >= t,
+            "edge <{u},{v}> trussness {t} vs coreness ({}, {})",
+            core[u as usize],
+            core[v as usize]
+        );
+    }
+}
+
+/// Pipeline + server end to end with concurrent clients.
+#[test]
+fn server_pipeline_concurrent() {
+    let h = serve("127.0.0.1:0").unwrap();
+    let addr = h.addr;
+    let threads: Vec<_> = (0..3)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let r = c
+                    .request(&format!(
+                        "DECOMP pp:blocks=3,size=10,pin=0.8,pout=0.02,seed={i} algo=pkt threads=2"
+                    ))
+                    .unwrap();
+                assert!(r.starts_with("OK "), "{r}");
+                let r = c.request(&format!("HIST complete:n={}", 4 + i)).unwrap();
+                assert!(r.starts_with("OK "), "{r}");
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert_eq!(h.jobs_served(), 6);
+    h.shutdown();
+}
+
+/// JobConfig coverage: every algorithm through the public pipeline on
+/// a graph with non-trivial truss structure.
+#[test]
+fn pipeline_reports_consistent_metadata() {
+    let spec = GraphSpec::parse("ba:n=300,k=5,seed=21").unwrap();
+    for algo in [Algorithm::Pkt, Algorithm::Wc, Algorithm::Ros, Algorithm::Local] {
+        let r = run_job(&JobConfig::new(spec.clone()).algorithm(algo).threads(2)).unwrap();
+        assert_eq!(r.m, r.trussness.len());
+        assert_eq!(r.histogram.iter().sum::<u64>(), r.m as u64);
+        assert_eq!(r.t_max as usize, r.histogram.len() - 1);
+        assert!(r.gweps > 0.0);
+    }
+}
+
+/// Wedge-count workloads: decomposition time is recorded per phase and
+/// phases sum below total (sanity for Fig. 4 benches).
+#[test]
+fn phase_times_consistent() {
+    let g = gen::rmat(1024, 8000, 0.57, 0.19, 0.19, 22);
+    let (g, _) = order::reorder(&g, Ordering::KCore);
+    let eg = EdgeGraph::new(g);
+    let res = truss::pkt(&eg, &Pool::new(2));
+    let s = &res.stats;
+    assert!(s.support_secs > 0.0);
+    assert!(s.scan_secs > 0.0);
+    assert!(s.process_secs > 0.0);
+    assert!(
+        s.support_secs + s.scan_secs + s.process_secs <= s.total_secs * 1.05,
+        "phases {:?} exceed total {}",
+        (s.support_secs, s.scan_secs, s.process_secs),
+        s.total_secs
+    );
+}

@@ -1,0 +1,170 @@
+//! Property-based tests over randomized graphs (own harness — see
+//! `trussx::util::forall`): the decomposition invariants from the
+//! k-truss literature, checked against all algorithm implementations.
+
+use trussx::gen;
+use trussx::graph::{EdgeGraph, GraphBuilder, Vertex};
+use trussx::kcore;
+use trussx::par::Pool;
+use trussx::triangle;
+use trussx::truss;
+use trussx::util::{forall, Rng};
+
+/// Random graph from a family chosen by the case seed — mixes degree
+/// skews and clustering levels so properties see diverse structure.
+fn random_graph(rng: &mut Rng) -> trussx::graph::Graph {
+    match rng.below(4) {
+        0 => gen::erdos_renyi(rng.range(4, 80), rng.f64() * 0.3, rng.next_u64()),
+        1 => gen::rmat(rng.range(8, 128), rng.range(16, 400), 0.57, 0.19, 0.19, rng.next_u64()),
+        2 => {
+            let blocks = rng.range(1, 5);
+            let size = rng.range(3, 14);
+            gen::planted_partition(blocks, size, 0.5 + rng.f64() * 0.5, 0.05, rng.next_u64())
+        }
+        _ => gen::barabasi_albert(rng.range(6, 80), rng.range(1, 5), rng.next_u64()),
+    }
+}
+
+#[test]
+fn prop_trussness_bounds() {
+    forall("trussness-bounds", 40, |rng| {
+        let g = random_graph(rng);
+        let eg = EdgeGraph::new(g);
+        let s0 = triangle::support_naive(&eg);
+        let res = truss::pkt(&eg, &Pool::new(2));
+        for e in 0..eg.m() {
+            let t = res.trussness[e];
+            // 2 <= t(e) <= S0(e) + 2 (initial support is an upper bound)
+            assert!(t >= 2);
+            assert!(t <= s0[e] + 2, "edge {e}: t={t} S0={}", s0[e]);
+        }
+    });
+}
+
+#[test]
+fn prop_truss_core_containment() {
+    forall("truss-core-containment", 40, |rng| {
+        let g = random_graph(rng);
+        let core = kcore::bz(&g);
+        let eg = EdgeGraph::new(g);
+        let res = truss::pkt(&eg, &Pool::new(2));
+        // k-truss edges live in the (k-1)-core
+        for (e, &(u, v)) in eg.el.iter().enumerate() {
+            let t = res.trussness[e];
+            assert!(core[u as usize] >= t - 1, "u coreness");
+            assert!(core[v as usize] >= t - 1, "v coreness");
+        }
+    });
+}
+
+#[test]
+fn prop_edge_addition_monotone() {
+    // adding an edge never decreases any existing edge's trussness
+    forall("edge-addition-monotone", 25, |rng| {
+        let g = random_graph(rng);
+        if g.n() < 3 {
+            return;
+        }
+        let eg = EdgeGraph::new(g.clone());
+        let before = truss::pkt(&eg, &Pool::new(1)).trussness;
+        // pick a non-edge
+        let n = g.n();
+        let mut extra = None;
+        for _ in 0..64 {
+            let u = rng.below(n as u64) as Vertex;
+            let v = rng.below(n as u64) as Vertex;
+            if u != v && !g.has_edge(u, v) {
+                extra = Some((u, v));
+                break;
+            }
+        }
+        let Some((u, v)) = extra else { return };
+        let mut edges: Vec<(Vertex, Vertex)> = eg.el.clone();
+        edges.push((u.min(v), u.max(v)));
+        let g2 = GraphBuilder::new().num_vertices(n).edges_vec(edges).build();
+        let eg2 = EdgeGraph::new(g2);
+        let after = truss::pkt(&eg2, &Pool::new(1)).trussness;
+        for (e, &(a, b)) in eg.el.iter().enumerate() {
+            let e2 = eg2.edge_id(a, b).unwrap() as usize;
+            assert!(
+                after[e2] >= before[e],
+                "edge <{a},{b}> dropped from {} to {}",
+                before[e],
+                after[e2]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_relabel_invariance() {
+    forall("relabel-invariance", 25, |rng| {
+        let g = random_graph(rng);
+        let n = g.n();
+        if n == 0 {
+            return;
+        }
+        // random permutation
+        let mut perm: Vec<Vertex> = (0..n as Vertex).collect();
+        rng.shuffle(&mut perm);
+        let g2 = trussx::order::relabel(&g, &perm);
+        let eg = EdgeGraph::new(g);
+        let eg2 = EdgeGraph::new(g2);
+        let t1 = truss::pkt(&eg, &Pool::new(2)).trussness;
+        let t2 = truss::pkt(&eg2, &Pool::new(2)).trussness;
+        for (e, &(u, v)) in eg.el.iter().enumerate() {
+            let e2 = eg2
+                .edge_id(perm[u as usize], perm[v as usize])
+                .expect("edge preserved") as usize;
+            assert_eq!(t1[e], t2[e2]);
+        }
+    });
+}
+
+#[test]
+fn prop_support_sum_is_3x_triangles() {
+    forall("support-triple-count", 40, |rng| {
+        let g = random_graph(rng);
+        let tri = triangle::count_triangles(&g);
+        let eg = EdgeGraph::new(g);
+        let s = triangle::into_plain(triangle::support_am4(&eg, &Pool::new(2)));
+        assert_eq!(s.iter().map(|&x| x as u64).sum::<u64>(), 3 * tri);
+    });
+}
+
+#[test]
+fn prop_kclass_histogram_conserved_across_algorithms() {
+    forall("kclass-conservation", 20, |rng| {
+        let g = random_graph(rng);
+        let eg = EdgeGraph::new(g);
+        let p = truss::pkt(&eg, &Pool::new(2)).trussness;
+        let w = truss::wc(&eg).trussness;
+        assert_eq!(truss::class_histogram(&p), truss::class_histogram(&w));
+        assert_eq!(p, w);
+    });
+}
+
+#[test]
+fn prop_definition_soundness() {
+    // PKT output satisfies the definitional support bound in every
+    // k-truss subgraph (expensive oracle — fewer cases)
+    forall("definition-soundness", 8, |rng| {
+        let g = random_graph(rng);
+        let eg = EdgeGraph::new(g);
+        let res = truss::pkt(&eg, &Pool::new(2));
+        truss::verify_definition(&eg, &res.trussness).unwrap();
+    });
+}
+
+#[test]
+fn prop_coreness_vs_degree_and_truss_relations() {
+    forall("core-deg-truss", 30, |rng| {
+        let g = random_graph(rng);
+        let core = kcore::bz(&g);
+        let par = kcore::park(&g, &Pool::new(3));
+        assert_eq!(core, par);
+        for u in 0..g.n() {
+            assert!(core[u] as usize <= g.degree(u as Vertex));
+        }
+    });
+}

@@ -1,0 +1,149 @@
+//! Integration tests across the AOT bridge: Rust loads the HLO-text
+//! artifacts produced by `make artifacts` and checks the numerics
+//! against both the graph algorithms (PKT) and hand-computed values.
+//!
+//! These tests SKIP (not fail) when artifacts/ is missing, so plain
+//! `cargo test` works before `make artifacts`; `make test` always
+//! builds artifacts first.
+
+use trussx::gen;
+use trussx::graph::EdgeGraph;
+use trussx::par::Pool;
+use trussx::runtime::{artifacts_dir, literal_matrix, literal_scalar, Runtime};
+use trussx::triangle;
+use trussx::truss::{self, dense::DenseBackend};
+
+fn runtime_or_skip() -> Option<(Runtime, trussx::runtime::Manifest)> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    let mut rt = Runtime::cpu().expect("PJRT CPU client");
+    let manifest = rt.load_manifest(&dir).expect("load artifacts");
+    Some((rt, manifest))
+}
+
+#[test]
+fn artifacts_load_and_register() {
+    let Some((rt, manifest)) = runtime_or_skip() else { return };
+    assert!(!manifest.support_blocks().is_empty());
+    for b in manifest.support_blocks() {
+        assert!(rt.has(&format!("support_{b}")));
+        assert!(rt.has(&format!("peel_{b}")));
+    }
+}
+
+#[test]
+fn support_artifact_k4_numerics() {
+    let Some((rt, manifest)) = runtime_or_skip() else { return };
+    let b = manifest.support_blocks()[0];
+    // K4 embedded in a b×b block: every edge in 2 triangles
+    let mut a = vec![0f32; b * b];
+    for u in 0..4 {
+        for v in 0..4 {
+            if u != v {
+                a[u * b + v] = 1.0;
+            }
+        }
+    }
+    let out = rt
+        .execute_f32(&format!("support_{b}"), &[literal_matrix(&a, b, b).unwrap()])
+        .unwrap();
+    let s = &out[0];
+    for u in 0..4 {
+        for v in 0..4 {
+            let want = if u == v { 0.0 } else { 2.0 };
+            assert_eq!(s[u * b + v], want, "S[{u},{v}]");
+        }
+    }
+    // everything outside the embedded K4 stays zero
+    assert_eq!(s.iter().sum::<f32>(), 12.0 * 2.0);
+}
+
+#[test]
+fn peel_artifact_threshold_semantics() {
+    let Some((rt, manifest)) = runtime_or_skip() else { return };
+    let b = manifest.support_blocks()[0];
+    // triangle + pendant edge: pendant has support 0, triangle edges 1
+    let mut a = vec![0f32; b * b];
+    for (u, v) in [(0, 1), (1, 2), (0, 2), (2, 3)] {
+        a[u * b + v] = 1.0;
+        a[v * b + u] = 1.0;
+    }
+    let out = rt
+        .execute_f32(
+            &format!("peel_{b}"),
+            &[literal_matrix(&a, b, b).unwrap(), literal_scalar(1.0)],
+        )
+        .unwrap();
+    let (a_new, s) = (&out[0], &out[1]);
+    assert_eq!(a_new[2 * b + 3], 0.0, "pendant edge dropped");
+    assert_eq!(a_new[3 * b + 2], 0.0);
+    assert_eq!(a_new[b + 2], 1.0, "triangle edge kept");
+    assert_eq!(s[b + 2], 1.0, "support output exposed");
+}
+
+#[test]
+fn dense_backend_support_matches_am4() {
+    let Some((rt, manifest)) = runtime_or_skip() else { return };
+    let g = gen::erdos_renyi(60, 0.15, 17);
+    let eg = EdgeGraph::new(g);
+    let backend = DenseBackend::for_graph(&rt, &manifest, eg.n()).unwrap();
+    let xla_s = backend.support(&eg).unwrap();
+    let am4_s = triangle::into_plain(triangle::support_am4(&eg, &Pool::new(2)));
+    assert_eq!(xla_s, am4_s);
+}
+
+#[test]
+fn dense_backend_decompose_matches_pkt() {
+    let Some((rt, manifest)) = runtime_or_skip() else { return };
+    let cases = vec![
+        gen::complete(12),
+        gen::erdos_renyi(50, 0.2, 3),
+        gen::planted_partition(2, 20, 0.8, 0.05, 4),
+        gen::ring(24),
+    ];
+    for g in cases {
+        let eg = EdgeGraph::new(g);
+        let backend = DenseBackend::for_graph(&rt, &manifest, eg.n()).unwrap();
+        let xla_truss = backend.decompose(&eg).unwrap();
+        let pkt_truss = truss::pkt(&eg, &Pool::new(2)).trussness;
+        assert_eq!(xla_truss, pkt_truss, "n={}", eg.n());
+    }
+}
+
+#[test]
+fn dense_backend_rejects_oversized_graph() {
+    let Some((rt, manifest)) = runtime_or_skip() else { return };
+    let max_b = *manifest.support_blocks().last().unwrap();
+    let g = gen::ring(max_b + 1);
+    let eg = EdgeGraph::new(g);
+    assert!(DenseBackend::for_graph(&rt, &manifest, eg.n()).is_err());
+}
+
+#[test]
+fn local_artifact_one_round() {
+    let Some((rt, manifest)) = runtime_or_skip() else { return };
+    let b = manifest.support_blocks()[0];
+    if !manifest.has(&format!("local_{b}")) {
+        return;
+    }
+    // bowtie: triangles {0,1,2} and {2,3,4}; all supports 1 — the local
+    // round keeps rho=1 everywhere (each triangle supports its edges)
+    let mut a = vec![0f32; b * b];
+    for (u, v) in [(0, 1), (1, 2), (0, 2), (2, 3), (3, 4), (2, 4)] {
+        a[u * b + v] = 1.0;
+        a[v * b + u] = 1.0;
+    }
+    let a_lit = literal_matrix(&a, b, b).unwrap();
+    let s = rt
+        .execute_f32(&format!("support_{b}"), &[literal_matrix(&a, b, b).unwrap()])
+        .unwrap()
+        .remove(0);
+    let rho = literal_matrix(&s, b, b).unwrap();
+    let out = rt
+        .execute_f32(&format!("local_{b}"), &[a_lit, rho])
+        .unwrap();
+    assert_eq!(out[0], s, "bowtie supports are already the fixpoint");
+}
