@@ -40,6 +40,12 @@ fn main() {
             }
         }
     }
+    // dump the full metrics snapshot accumulated across the runs —
+    // phase histograms, runtime load counters, etc.
+    let expo = trussx::obs::expo::render(trussx::obs::global());
+    if let Ok(mut f) = std::fs::File::create("bench_out/metrics.prom") {
+        let _ = f.write_all(expo.as_bytes());
+    }
     if failures > 0 {
         std::process::exit(1);
     }

@@ -1,7 +1,9 @@
 //! Extension benches: design-choice ablations and the XLA dense-block
 //! backend comparison (DESIGN.md §3, rows `ablate` and `xla`).
 
-use crate::gen::{suite, suite_by_name, SuiteGraph};
+use crate::gen::{suite, SuiteGraph};
+#[cfg(feature = "xla")]
+use crate::gen::suite_by_name;
 use crate::graph::EdgeGraph;
 use crate::metrics::{time, Table};
 use crate::order::{self, Ordering};
@@ -9,6 +11,7 @@ use crate::par::Pool;
 use crate::triangle;
 use crate::truss;
 use crate::util::fmt_secs;
+#[cfg(feature = "xla")]
 use anyhow::Result;
 use std::sync::atomic::AtomicI32;
 
@@ -87,6 +90,8 @@ pub fn bench_ablate(scale: usize, threads: usize) -> String {
 
 /// XLA dense-block backend: agreement + time vs native PKT on graphs
 /// that fit one dense block, across the available block sizes.
+/// Only built with the `xla` feature (requires the PJRT runtime).
+#[cfg(feature = "xla")]
 pub fn bench_xla() -> Result<String> {
     let dir = crate::runtime::artifacts_dir();
     let mut rt = crate::runtime::Runtime::cpu()?;

@@ -102,7 +102,9 @@ pub fn bench_table3(scale: usize) -> String {
         let (g, _) = order::reorder(&graph, Ordering::KCore);
         let wedges = g.wedge_count();
         let eg = EdgeGraph::new(g);
-        let (_, pkt_secs) = time(|| truss::pkt(&eg, &pool1));
+        // PKT time comes from its own obs spans (support + peel), so the
+        // table agrees with the registry histograms and any --trace capture
+        let pkt_secs = truss::pkt(&eg, &pool1).stats.total_secs;
         let wc_cell = if wedges <= WC_WEDGE_BUDGET {
             let (_, wc_secs) = time(|| truss::wc(&eg));
             fmt_secs(wc_secs)
@@ -144,8 +146,9 @@ pub fn bench_table4(scale: usize, threads: usize) -> String {
         let (g, _) = order::reorder(&graph, Ordering::KCore);
         let wedges = g.wedge_count();
         let eg = EdgeGraph::new(g);
-        let (_, par_secs) = time(|| truss::pkt(&eg, &pool_t));
-        let (_, seq_secs) = time(|| truss::pkt(&eg, &pool1));
+        // span-derived timings (see bench_table3)
+        let par_secs = truss::pkt(&eg, &pool_t).stats.total_secs;
+        let seq_secs = truss::pkt(&eg, &pool1).stats.total_secs;
         let (_, ros_secs) = time(|| truss::ros(&eg, &pool_t));
         let rate = gweps(wedges, par_secs);
         rates.push(rate);

@@ -1,26 +1,37 @@
 //! A multi-client truss-analytics server over TCP (std::net,
 //! thread-per-connection — tokio is not available offline).
 //!
-//! Line protocol (one request per line, one `OK ...` / `ERR ...` reply):
+//! Line protocol (one request per line, one `OK ...` / `ERR ...` reply;
+//! `METRICS` is the one multi-line reply, framed by its header):
 //!
 //! ```text
 //! DECOMP <graphspec> [algo=pkt|wc|ros|local] [threads=N] [order=nat|deg|kco]
-//! HIST   <graphspec> [...same options]       → trussness histogram
-//! STATUS                                      → jobs served, platform
-//! QUIT                                        → close this connection
+//! HIST    <graphspec> [...same options]   → trussness histogram
+//! STATUS                                  → jobs, in-flight, uptime, threads
+//! METRICS                                 → OK lines=<N> + N exposition lines
+//! QUIT                                    → close this connection
 //! ```
+//!
+//! Every request is counted, timed, and error-tracked per verb in the
+//! global `obs` registry (`server_requests_total{verb=..}`,
+//! `server_errors_total{verb=..}`, `server_request_seconds{verb=..}`),
+//! which `METRICS` then serves back in Prometheus text format.
 
 use super::{Algorithm, GraphSpec, JobConfig};
+use crate::obs;
 use crate::order::Ordering as VOrdering;
 use anyhow::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 struct ServerState {
     stop: AtomicBool,
     jobs: AtomicU64,
+    inflight: AtomicU64,
+    started: Instant,
 }
 
 /// Handle to a running server; dropping it does NOT stop the server —
@@ -53,7 +64,12 @@ impl ServerHandle {
 pub fn serve(addr: &str) -> Result<ServerHandle> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let local = listener.local_addr()?;
-    let state = Arc::new(ServerState { stop: AtomicBool::new(false), jobs: AtomicU64::new(0) });
+    let state = Arc::new(ServerState {
+        stop: AtomicBool::new(false),
+        jobs: AtomicU64::new(0),
+        inflight: AtomicU64::new(0),
+        started: Instant::now(),
+    });
     let accept_state = state.clone();
     let join = std::thread::spawn(move || {
         for conn in listener.incoming() {
@@ -84,15 +100,53 @@ fn handle_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
         if req.is_empty() {
             continue;
         }
-        let reply = match dispatch(req, state) {
+        let verb = canonical_verb(req);
+        let m = verb_metrics(verb);
+        m.requests.inc();
+        let t0 = Instant::now();
+        let outcome = dispatch(req, state);
+        m.latency.observe(t0.elapsed().as_secs_f64());
+        let reply = match outcome {
             Ok(Some(r)) => r,
             Ok(None) => return Ok(()), // QUIT
-            Err(e) => format!("ERR {e:#}").replace('\n', " "),
+            Err(e) => {
+                m.errors.inc();
+                format!("ERR {e:#}").replace('\n', " ")
+            }
         };
         writer.write_all(reply.as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
         let _ = peer;
+    }
+}
+
+/// Normalize a request line to a static verb for metric labels (bounded
+/// cardinality: arbitrary client input must never become a label value).
+fn canonical_verb(req: &str) -> &'static str {
+    let verb = req.split_whitespace().next().unwrap_or("").to_ascii_uppercase();
+    match verb.as_str() {
+        "DECOMP" => "DECOMP",
+        "HIST" => "HIST",
+        "STATUS" => "STATUS",
+        "METRICS" => "METRICS",
+        "QUIT" => "QUIT",
+        _ => "UNKNOWN",
+    }
+}
+
+struct VerbMetrics {
+    requests: obs::Counter,
+    errors: obs::Counter,
+    latency: obs::Histogram,
+}
+
+fn verb_metrics(verb: &'static str) -> VerbMetrics {
+    let r = obs::global();
+    VerbMetrics {
+        requests: r.counter("server_requests_total", &[("verb", verb)]),
+        errors: r.counter("server_errors_total", &[("verb", verb)]),
+        latency: r.histogram("server_request_seconds", &[("verb", verb)]),
     }
 }
 
@@ -102,14 +156,29 @@ fn dispatch(req: &str, state: &ServerState) -> Result<Option<String>> {
     match verb.as_str() {
         "QUIT" => Ok(None),
         "STATUS" => Ok(Some(format!(
-            "OK jobs={} threads_default={}",
+            "OK jobs={} inflight={} uptime_secs={:.3} threads_default={}",
             state.jobs.load(Ordering::Relaxed),
+            state.inflight.load(Ordering::Relaxed),
+            state.started.elapsed().as_secs_f64(),
             crate::par::Pool::default_threads()
         ))),
+        "METRICS" => {
+            let body = obs::expo::render(obs::global());
+            let mut reply = format!("OK lines={}", body.lines().count());
+            for l in body.lines() {
+                reply.push('\n');
+                reply.push_str(l);
+            }
+            Ok(Some(reply))
+        }
         "DECOMP" | "HIST" => {
             let spec_str = parts.next().context("missing graph spec")?;
             let cfg = parse_job(spec_str, parts)?;
-            let report = super::run_job(&cfg)?;
+            let gauge = obs::global().gauge("server_inflight_jobs", &[]);
+            gauge.set(state.inflight.fetch_add(1, Ordering::Relaxed) as f64 + 1.0);
+            let report = super::run_job(&cfg);
+            gauge.set(state.inflight.fetch_sub(1, Ordering::Relaxed) as f64 - 1.0);
+            let report = report?;
             state.jobs.fetch_add(1, Ordering::Relaxed);
             if verb == "DECOMP" {
                 Ok(Some(format!("OK {}", report.summary())))
@@ -124,7 +193,7 @@ fn dispatch(req: &str, state: &ServerState) -> Result<Option<String>> {
                 Ok(Some(format!("OK {}", hist.join(","))))
             }
         }
-        _ => Err(anyhow!("unknown verb '{verb}' (DECOMP|HIST|STATUS|QUIT)")),
+        _ => Err(anyhow!("unknown verb '{verb}' (DECOMP|HIST|STATUS|METRICS|QUIT)")),
     }
 }
 
@@ -167,6 +236,27 @@ impl Client {
         self.reader.read_line(&mut line)?;
         Ok(line.trim_end().to_string())
     }
+
+    /// Fetch the Prometheus exposition via `METRICS`: reads the
+    /// `OK lines=<N>` header, then exactly N body lines.
+    pub fn metrics(&mut self) -> Result<String> {
+        let header = self.request("METRICS")?;
+        let n: usize = header
+            .strip_prefix("OK lines=")
+            .with_context(|| format!("bad METRICS header '{header}'"))?
+            .parse()
+            .context("bad METRICS line count")?;
+        let mut body = String::new();
+        let mut line = String::new();
+        for _ in 0..n {
+            line.clear();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(anyhow!("connection closed mid-METRICS body"));
+            }
+            body.push_str(&line);
+        }
+        Ok(body)
+    }
 }
 
 #[cfg(test)]
@@ -204,6 +294,43 @@ mod tests {
         assert!(c.request("DECOMP er:n=10,p=0.1 bogus").unwrap().starts_with("ERR"));
         // server still alive after errors
         assert!(c.request("STATUS").unwrap().starts_with("OK"));
+        h.shutdown();
+    }
+
+    #[test]
+    fn server_status_fields() {
+        let h = serve("127.0.0.1:0").unwrap();
+        let mut c = Client::connect(h.addr).unwrap();
+        let r = c.request("STATUS").unwrap();
+        assert!(r.starts_with("OK jobs=0 "), "{r}");
+        assert!(r.contains("inflight=0"), "{r}");
+        assert!(r.contains("uptime_secs="), "{r}");
+        assert!(r.contains("threads_default="), "{r}");
+        let uptime: f64 = r
+            .split_whitespace()
+            .find_map(|f| f.strip_prefix("uptime_secs="))
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(uptime >= 0.0);
+        h.shutdown();
+    }
+
+    #[test]
+    fn server_metrics_verb() {
+        let h = serve("127.0.0.1:0").unwrap();
+        let mut c = Client::connect(h.addr).unwrap();
+        let r = c.request("DECOMP complete:n=5 threads=1").unwrap();
+        assert!(r.starts_with("OK "), "{r}");
+        let body = c.metrics().unwrap();
+        assert!(
+            body.contains("server_requests_total{verb=\"DECOMP\"}"),
+            "{body}"
+        );
+        assert!(body.contains("# TYPE server_request_seconds histogram"), "{body}");
+        assert!(body.contains("phase_seconds_bucket{phase=\"pkt.peel\""), "{body}");
+        // the connection stays usable after the multi-line reply
+        assert!(c.request("STATUS").unwrap().starts_with("OK "));
         h.shutdown();
     }
 

@@ -15,6 +15,7 @@ use std::sync::atomic::{AtomicI64, AtomicU32, Ordering};
 
 /// Serial BZ k-core: returns the coreness of every vertex.
 pub fn bz(g: &Graph) -> Vec<u32> {
+    let _sp = crate::obs::span("kcore.bz");
     let n = g.n();
     if n == 0 {
         return vec![];
@@ -69,6 +70,7 @@ pub fn bz(g: &Graph) -> Vec<u32> {
 /// Parallel ParK-style k-core. Level-synchronous peeling with frontier
 /// arrays; the direct vertex analogue of PKT's edge peeling.
 pub fn park(g: &Graph, pool: &Pool) -> Vec<u32> {
+    let _sp = crate::obs::span("kcore.park");
     let n = g.n();
     if n == 0 {
         return vec![];
@@ -167,6 +169,7 @@ pub fn max_coreness(core: &[u32]) -> u32 {
 /// the level-synchronous ParK, mirrored at the truss level by
 /// [`crate::truss::local`].
 pub fn mpm(g: &Graph, pool: &Pool, max_rounds: u32) -> Vec<u32> {
+    let _sp = crate::obs::span("kcore.mpm");
     let n = g.n();
     if n == 0 {
         return vec![];

@@ -13,8 +13,14 @@
 //! - **L1 (python/compile/kernels/)**: Pallas tiled masked-matmul kernel
 //!   called from L2; checked against a pure-jnp oracle.
 //!
-//! The Rust binary loads the AOT artifacts via the `xla` crate (PJRT CPU
-//! client) — Python is never on the request path.
+//! The Rust binary can load the AOT artifacts via the `xla` crate (PJRT
+//! CPU client) — Python is never on the request path. That path is
+//! gated behind the off-by-default `xla` cargo feature so the default
+//! build stays dependency-free and offline.
+//!
+//! Cross-cutting: the [`obs`] subsystem (std-only metrics registry,
+//! RAII phase spans, JSONL trace sink, Prometheus exposition) is wired
+//! through the runtime, the kernels, and the coordinator.
 
 pub mod bench;
 pub mod coordinator;
@@ -22,8 +28,10 @@ pub mod gen;
 pub mod graph;
 pub mod kcore;
 pub mod metrics;
+pub mod obs;
 pub mod order;
 pub mod par;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod triangle;
 pub mod truss;

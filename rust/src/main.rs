@@ -1,13 +1,18 @@
-//! trussx CLI — the leader entrypoint.
+//! pallas CLI — the leader entrypoint.
 //!
 //! ```text
-//! trussx decompose <graphspec> [--algo pkt|wc|ros|local] [--threads N]
+//! pallas decompose <graphspec> [--algo pkt|wc|ros|local] [--threads N]
 //!                  [--order nat|deg|kco] [--hist]
-//! trussx stats <graphspec>
-//! trussx bench <id|all> [--scale S] [--threads N]
-//! trussx serve [--addr HOST:PORT]
-//! trussx generate <graphspec> --out FILE[.el|.bin]
+//! pallas stats <graphspec>
+//! pallas bench <id|all> [--scale S] [--threads N]
+//! pallas serve [--addr HOST:PORT]
+//! pallas generate <graphspec> --out FILE[.el|.bin]
+//! pallas report <trace.jsonl>
 //! ```
+//!
+//! The global `--trace <path>` flag (any position) streams one JSONL
+//! event per closed phase span to `path`; `pallas report` renders the
+//! phase/level tables back from such a capture.
 //!
 //! (Arg parsing is hand-rolled: the offline registry carries no clap.)
 
@@ -15,16 +20,30 @@ use anyhow::{anyhow, bail, Context, Result};
 use trussx::coordinator::{run_job, serve, Algorithm, GraphSpec, JobConfig};
 use trussx::graph::{io, EdgeGraph};
 use trussx::kcore;
+use trussx::obs;
 use trussx::order::Ordering;
 use trussx::par::Pool;
 use trussx::triangle;
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    if let Err(e) = dispatch(&args) {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&mut args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+fn run(args: &mut Vec<String>) -> Result<()> {
+    // global --trace flag: extract before command dispatch
+    if let Some(i) = args.iter().position(|a| a == "--trace") {
+        anyhow::ensure!(i + 1 < args.len(), "--trace needs a file path");
+        let path = args.remove(i + 1);
+        args.remove(i);
+        obs::sink::set_path(&path).with_context(|| format!("opening trace file {path}"))?;
+    }
+    let result = dispatch(args);
+    obs::sink::flush();
+    result
 }
 
 /// Minimal option scanner: collects `--key value` pairs and positionals.
@@ -83,26 +102,39 @@ fn dispatch(args: &[String]) -> Result<()> {
         "bench" => cmd_bench(rest),
         "serve" => cmd_serve(rest),
         "generate" => cmd_generate(rest),
+        "report" => cmd_report(rest),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
         }
-        other => bail!("unknown command '{other}' (try `trussx help`)"),
+        other => bail!("unknown command '{other}' (try `pallas help`)"),
     }
 }
 
 fn print_help() {
     println!(
-        "trussx — shared-memory graph truss decomposition (PKT)\n\n\
-         USAGE:\n  trussx decompose <graphspec> [--algo pkt|wc|ros|local] [--threads N] [--order nat|deg|kco] [--hist]\n  \
-         trussx stats <graphspec>\n  \
-         trussx bench <table1|table2|table3|table4|fig4|fig5|fig6|ablate|xla|all> [--scale S] [--threads N]\n  \
-         trussx query <graphspec> --vertex V [--k K]\n  \
-         trussx serve [--addr HOST:PORT]\n  \
-         trussx generate <graphspec> --out FILE(.el|.bin)\n\n\
+        "pallas — shared-memory graph truss decomposition (PKT)\n\n\
+         USAGE:\n  pallas decompose <graphspec> [--algo pkt|wc|ros|local] [--threads N] [--order nat|deg|kco] [--hist]\n  \
+         pallas stats <graphspec>\n  \
+         pallas bench <table1|table2|table3|table4|fig4|fig5|fig6|ablate|xla|all> [--scale S] [--threads N]\n  \
+         pallas query <graphspec> --vertex V [--k K]\n  \
+         pallas serve [--addr HOST:PORT]\n  \
+         pallas generate <graphspec> --out FILE(.el|.bin)\n  \
+         pallas report <trace.jsonl>\n\n\
+         GLOBAL FLAGS:\n  --trace FILE   stream phase-span events (JSONL) to FILE\n\n\
          GRAPH SPECS:\n  suite:<name>  rmat:n=..,m=..  er:n=..,p=..  ba:n=..,k=..\n  \
          ws:n=..,k=..,beta=..  pp:blocks=..,size=..,pin=..,pout=..\n  complete:n=..  file:/path\n"
     );
+}
+
+fn cmd_report(args: &[String]) -> Result<()> {
+    let o = Opts::parse(args, &[])?;
+    let path = o
+        .positional
+        .first()
+        .context("missing trace file (usage: pallas report <trace.jsonl>)")?;
+    print!("{}", obs::report::render_trace_report(path)?);
+    Ok(())
 }
 
 fn cmd_decompose(args: &[String]) -> Result<()> {
@@ -186,9 +218,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let o = Opts::parse(args, &[])?;
     let addr = o.get("addr").unwrap_or("127.0.0.1:7077");
     let handle = serve(addr)?;
-    println!("trussx server listening on {}", handle.addr);
+    println!("pallas server listening on {}", handle.addr);
     println!(
-        "protocol: DECOMP <spec> [algo=..] [threads=..] [order=..] | HIST <spec> | STATUS | QUIT"
+        "protocol: DECOMP <spec> [algo=..] [threads=..] [order=..] | HIST <spec> | STATUS | METRICS | QUIT"
     );
     // foreground: block forever (Ctrl-C to stop)
     loop {

@@ -48,17 +48,24 @@ pub fn time_best<T>(reps: usize, mut f: impl FnMut() -> T) -> (T, f64) {
 
 /// Giga-wedges processed per second — the paper's normalized performance
 /// rate (§4.2): wedge count / time / 10⁹.
+///
+/// Returns `f64::NAN` when `secs` is non-positive or non-finite: a rate
+/// over a zero, negative, or unmeasured duration is undefined, and a
+/// silent `0.0` would poison downstream aggregates like [`geomean`].
 pub fn gweps(wedges: u64, secs: f64) -> f64 {
-    if secs <= 0.0 {
-        return 0.0;
+    if !secs.is_finite() || secs <= 0.0 {
+        return f64::NAN;
     }
     wedges as f64 / secs / 1e9
 }
 
 /// Geometric mean (the paper summarizes rates and speedups this way).
+///
+/// Returns `f64::NAN` for an empty slice — the geometric mean of
+/// nothing is undefined, and `0.0` would read as "measured and slow".
 pub fn geomean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
-        return 0.0;
+        return f64::NAN;
     }
     let s: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
     (s / xs.len() as f64).exp()
@@ -124,14 +131,26 @@ mod tests {
     #[test]
     fn gweps_rate() {
         assert!((gweps(2_000_000_000, 2.0) - 1.0).abs() < 1e-12);
-        assert_eq!(gweps(100, 0.0), 0.0);
+    }
+
+    #[test]
+    fn gweps_undefined_durations_are_nan() {
+        assert!(gweps(100, 0.0).is_nan());
+        assert!(gweps(100, -1.0).is_nan());
+        assert!(gweps(100, f64::NAN).is_nan());
+        assert!(gweps(100, f64::INFINITY).is_nan());
+        assert!(gweps(0, 1.0) == 0.0, "zero work in finite time is a real rate");
     }
 
     #[test]
     fn geomean_basics() {
         assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
         assert!((geomean(&[5.0]) - 5.0).abs() < 1e-12);
-        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn geomean_empty_is_nan() {
+        assert!(geomean(&[]).is_nan());
     }
 
     #[test]

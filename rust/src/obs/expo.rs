@@ -1,0 +1,163 @@
+//! Prometheus-style text exposition of a [`Registry`] snapshot.
+//!
+//! Output follows the text format version 0.0.4: one `# TYPE` line per
+//! metric name, counters/gauges as plain samples, histograms expanded
+//! into cumulative `_bucket{le="..."}` samples plus `_sum` and
+//! `_count`. Label values are escaped per the spec (`\\`, `\"`, `\n`).
+
+use crate::obs::registry::{MetricKey, Registry, Snapshot};
+use std::fmt::Write;
+
+/// Render the whole registry as Prometheus exposition text.
+pub fn render(reg: &Registry) -> String {
+    let snaps = reg.snapshot();
+    let mut out = String::new();
+    let mut last_name = "";
+    for (key, snap) in &snaps {
+        if key.name != last_name {
+            let ty = match snap {
+                Snapshot::Counter(_) => "counter",
+                Snapshot::Gauge(_) => "gauge",
+                Snapshot::Histogram { .. } => "histogram",
+            };
+            let _ = writeln!(out, "# TYPE {} {}", key.name, ty);
+            last_name = &key.name;
+        }
+        match snap {
+            Snapshot::Counter(v) => {
+                let _ = writeln!(out, "{}{} {}", key.name, label_block(key, None), v);
+            }
+            Snapshot::Gauge(v) => {
+                let _ = writeln!(out, "{}{} {}", key.name, label_block(key, None), v);
+            }
+            Snapshot::Histogram { bounds, buckets, sum } => {
+                let mut cum = 0u64;
+                for (i, b) in bounds.iter().enumerate() {
+                    cum += buckets[i];
+                    let _ = writeln!(
+                        out,
+                        "{}_bucket{} {}",
+                        key.name,
+                        label_block(key, Some(&format!("{b}"))),
+                        cum
+                    );
+                }
+                cum += buckets[bounds.len()];
+                let _ = writeln!(
+                    out,
+                    "{}_bucket{} {}",
+                    key.name,
+                    label_block(key, Some("+Inf")),
+                    cum
+                );
+                let _ = writeln!(out, "{}_sum{} {}", key.name, label_block(key, None), sum);
+                let _ = writeln!(out, "{}_count{} {}", key.name, label_block(key, None), cum);
+            }
+        }
+    }
+    out
+}
+
+/// Render `{k="v",...}` for a key, optionally appending an `le` label;
+/// empty string when there are no labels at all.
+fn label_block(key: &MetricKey, le: Option<&str>) -> String {
+    if key.labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut out = String::from("{");
+    let mut first = true;
+    for (k, v) in &key.labels {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(out, "{}=\"{}\"", k, escape_label_value(v));
+    }
+    if let Some(le) = le {
+        if !first {
+            out.push(',');
+        }
+        let _ = write!(out, "le=\"{le}\"");
+    }
+    out.push('}');
+    out
+}
+
+/// Escape a label value per the Prometheus text format: backslash,
+/// double quote, and newline.
+pub fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escaping_rules() {
+        assert_eq!(escape_label_value("plain"), "plain");
+        assert_eq!(escape_label_value("a\\b"), "a\\\\b");
+        assert_eq!(escape_label_value("say \"hi\""), "say \\\"hi\\\"");
+        assert_eq!(escape_label_value("two\nlines"), "two\\nlines");
+    }
+
+    #[test]
+    fn counter_and_gauge_lines() {
+        let r = Registry::new();
+        r.counter("requests_total", &[("verb", "DECOMP")]).add(7);
+        r.gauge("inflight", &[]).set(2.0);
+        let text = render(&r);
+        assert!(text.contains("# TYPE requests_total counter"));
+        assert!(text.contains("requests_total{verb=\"DECOMP\"} 7"));
+        assert!(text.contains("# TYPE inflight gauge"));
+        assert!(text.contains("inflight 2"));
+    }
+
+    #[test]
+    fn type_line_once_per_name() {
+        let r = Registry::new();
+        r.counter("reqs", &[("verb", "A")]).inc();
+        r.counter("reqs", &[("verb", "B")]).inc();
+        let text = render(&r);
+        assert_eq!(text.matches("# TYPE reqs counter").count(), 1);
+    }
+
+    #[test]
+    fn histogram_cumulative_buckets() {
+        let r = Registry::new();
+        let h = r.histogram_with_buckets("lat", &[("p", "x")], &[0.1, 1.0]);
+        h.observe(0.05);
+        h.observe(0.05);
+        h.observe(0.5);
+        h.observe(5.0);
+        let text = render(&r);
+        assert!(text.contains("# TYPE lat histogram"));
+        assert!(text.contains("lat_bucket{p=\"x\",le=\"0.1\"} 2"));
+        assert!(text.contains("lat_bucket{p=\"x\",le=\"1\"} 3"));
+        assert!(text.contains("lat_bucket{p=\"x\",le=\"+Inf\"} 4"));
+        assert!(text.contains("lat_count{p=\"x\"} 4"));
+        let sum_line = text
+            .lines()
+            .find(|l| l.starts_with("lat_sum"))
+            .expect("sum line present");
+        let sum: f64 = sum_line.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!((sum - 5.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn escaped_label_value_renders() {
+        let r = Registry::new();
+        r.counter("c", &[("path", "a\"b")]).inc();
+        let text = render(&r);
+        assert!(text.contains("c{path=\"a\\\"b\"} 1"));
+    }
+}

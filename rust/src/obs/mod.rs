@@ -1,0 +1,27 @@
+//! `obs` — zero-dependency observability: metrics, phase spans, trace
+//! sink, and Prometheus-style exposition.
+//!
+//! The paper's entire argument is measured behavior — phase breakdowns
+//! (Figs. 4–5), per-level frontier sizes (Fig. 6), thread scaling — so
+//! the decomposition kernels, the parallel runtime, and the coordinator
+//! all record into one process-global [`Registry`]:
+//!
+//! - [`registry`] — atomic `Counter` / `Gauge` / `Histogram` cells with
+//!   label support; handles are lock-free on the hot path.
+//! - [`span`] — RAII phase spans (nestable, thread-ordinal tagged) that
+//!   feed `phase_seconds{phase=...}` histograms.
+//! - [`sink`] — optional JSONL trace-event stream (`TRUSSX_TRACE` env
+//!   var or `--trace` flag), one event per span close.
+//! - [`expo`] — Prometheus text exposition, served by the coordinator's
+//!   `METRICS` verb and dumped by the bench harness.
+//! - [`report`] — offline phase/level tables from a captured trace
+//!   (`pallas report <trace.jsonl>`).
+
+pub mod expo;
+pub mod registry;
+pub mod report;
+pub mod sink;
+pub mod span;
+
+pub use registry::{global, Counter, Gauge, Histogram, Registry, Snapshot};
+pub use span::{span, span_with, thread_ord, Span};

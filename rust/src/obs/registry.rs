@@ -1,0 +1,414 @@
+//! Process-global metric registry: atomic counters, gauges, and
+//! histograms with label support. Hand-rolled on std-only primitives —
+//! the offline registry carries no `prometheus`/`metrics` crates.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are cheap `Arc`
+//! clones of the registered cell: look one up once (or cache it in a
+//! `OnceLock`) and update it lock-free from any thread. The registry
+//! mutex is only taken at registration and snapshot time, never on the
+//! metric hot path.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+/// Default duration buckets (seconds) for phase/latency histograms:
+/// 1 µs … 60 s, roughly logarithmic, matching the dynamic range between
+/// a single sub-level barrier and a full large-graph decomposition.
+pub const DEFAULT_TIME_BUCKETS: &[f64] = &[
+    1e-6, 1e-5, 1e-4, 1e-3, 5e-3, 1e-2, 5e-2, 0.1, 0.5, 1.0, 5.0, 10.0, 60.0,
+];
+
+/// Identity of a metric: name plus its sorted label set.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct MetricKey {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+}
+
+impl MetricKey {
+    fn new(name: &str, labels: &[(&str, &str)]) -> Self {
+        let mut labels: Vec<(String, String)> = labels
+            .iter()
+            .map(|&(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        labels.sort();
+        Self { name: name.to_string(), labels }
+    }
+}
+
+/// Monotone counter.
+#[derive(Clone)]
+pub struct Counter {
+    cell: Arc<AtomicU64>,
+}
+
+impl Counter {
+    fn new() -> Self {
+        Self { cell: Arc::new(AtomicU64::new(0)) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.cell.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.cell.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge holding an `f64` (stored as bits in an atomic).
+#[derive(Clone)]
+pub struct Gauge {
+    bits: Arc<AtomicU64>,
+}
+
+impl Gauge {
+    fn new() -> Self {
+        Self { bits: Arc::new(AtomicU64::new(0f64.to_bits())) }
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, v: f64) {
+        atomic_add_f64(&self.bits, v);
+    }
+
+    #[inline]
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+struct HistogramCore {
+    /// Sorted upper bounds; bucket `i` counts observations in
+    /// `(bounds[i-1], bounds[i]]`, plus one trailing `+Inf` bucket.
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+/// Fixed-bucket histogram (Prometheus `le` semantics: bounds are
+/// inclusive upper edges). Non-finite observations are dropped.
+#[derive(Clone)]
+pub struct Histogram {
+    core: Arc<HistogramCore>,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Self {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing"
+        );
+        assert!(bounds.iter().all(|b| b.is_finite()), "histogram bounds must be finite");
+        let buckets = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Self {
+            core: Arc::new(HistogramCore {
+                bounds: bounds.to_vec(),
+                buckets,
+                count: AtomicU64::new(0),
+                sum_bits: AtomicU64::new(0f64.to_bits()),
+            }),
+        }
+    }
+
+    /// Record one observation.
+    pub fn observe(&self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let idx = self.core.bounds.partition_point(|&b| b < v);
+        self.core.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.core.count.fetch_add(1, Ordering::Relaxed);
+        atomic_add_f64(&self.core.sum_bits, v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.core.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.core.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Per-bucket (non-cumulative) counts; the last slot is `+Inf`.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.core.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.core.bounds
+    }
+}
+
+fn atomic_add_f64(bits: &AtomicU64, v: f64) {
+    let mut cur = bits.load(Ordering::Relaxed);
+    loop {
+        let new = (f64::from_bits(cur) + v).to_bits();
+        match bits.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+#[derive(Clone)]
+enum MetricCell {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn name(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+struct Inner {
+    metrics: BTreeMap<MetricKey, MetricCell>,
+    /// Every label set of one metric name shares one type.
+    kinds: BTreeMap<String, Kind>,
+}
+
+/// A metric registry. Usually accessed through the process-global
+/// [`global()`] instance; separate registries exist for tests.
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Point-in-time value of one metric (see [`Registry::snapshot`]).
+#[derive(Clone, Debug)]
+pub enum Snapshot {
+    Counter(u64),
+    Gauge(f64),
+    Histogram { bounds: Vec<f64>, buckets: Vec<u64>, sum: f64 },
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(Inner { metrics: BTreeMap::new(), kinds: BTreeMap::new() }),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn cell(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        kind: Kind,
+        make: impl FnOnce() -> MetricCell,
+    ) -> MetricCell {
+        let key = MetricKey::new(name, labels);
+        let mut inner = self.lock();
+        let existing_kind = *inner.kinds.entry(key.name.clone()).or_insert(kind);
+        assert!(
+            existing_kind == kind,
+            "metric '{name}' already registered as a {} (requested {})",
+            existing_kind.name(),
+            kind.name()
+        );
+        inner.metrics.entry(key).or_insert_with(make).clone()
+    }
+
+    /// Get or create a counter.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        match self.cell(name, labels, Kind::Counter, || MetricCell::Counter(Counter::new())) {
+            MetricCell::Counter(c) => c,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Get or create a gauge.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        match self.cell(name, labels, Kind::Gauge, || MetricCell::Gauge(Gauge::new())) {
+            MetricCell::Gauge(g) => g,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Get or create a histogram with [`DEFAULT_TIME_BUCKETS`].
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Histogram {
+        self.histogram_with_buckets(name, labels, DEFAULT_TIME_BUCKETS)
+    }
+
+    /// Get or create a histogram with explicit bucket bounds. If the
+    /// metric already exists its original bounds win.
+    pub fn histogram_with_buckets(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Histogram {
+        match self.cell(name, labels, Kind::Histogram, || {
+            MetricCell::Histogram(Histogram::new(bounds))
+        }) {
+            MetricCell::Histogram(h) => h,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Consistent point-in-time snapshot of every metric, sorted by
+    /// (name, labels) — the input to the Prometheus exposition.
+    pub fn snapshot(&self) -> Vec<(MetricKey, Snapshot)> {
+        let inner = self.lock();
+        inner
+            .metrics
+            .iter()
+            .map(|(k, cell)| {
+                let snap = match cell {
+                    MetricCell::Counter(c) => Snapshot::Counter(c.get()),
+                    MetricCell::Gauge(g) => Snapshot::Gauge(g.get()),
+                    MetricCell::Histogram(h) => Snapshot::Histogram {
+                        bounds: h.bounds().to_vec(),
+                        buckets: h.bucket_counts(),
+                        sum: h.sum(),
+                    },
+                };
+                (k.clone(), snap)
+            })
+            .collect()
+    }
+}
+
+/// The process-global registry every subsystem records into.
+pub fn global() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_shared_across_lookups() {
+        let r = Registry::new();
+        let a = r.counter("reqs", &[("verb", "X")]);
+        a.inc();
+        a.add(2);
+        let b = r.counter("reqs", &[("verb", "X")]);
+        assert_eq!(b.get(), 3);
+        // different labels → different cell
+        let c = r.counter("reqs", &[("verb", "Y")]);
+        assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn label_order_is_canonical() {
+        let r = Registry::new();
+        let a = r.counter("m", &[("a", "1"), ("b", "2")]);
+        a.inc();
+        let b = r.counter("m", &[("b", "2"), ("a", "1")]);
+        assert_eq!(b.get(), 1);
+    }
+
+    #[test]
+    fn gauge_set_get() {
+        let r = Registry::new();
+        let g = r.gauge("load", &[]);
+        g.set(1.5);
+        assert_eq!(g.get(), 1.5);
+        g.add(0.25);
+        assert_eq!(g.get(), 1.75);
+    }
+
+    #[test]
+    fn histogram_bucketing_le_semantics() {
+        let r = Registry::new();
+        let h = r.histogram_with_buckets("h", &[], &[0.1, 1.0, 10.0]);
+        h.observe(0.05); // ≤ 0.1
+        h.observe(0.1); // ≤ 0.1 (inclusive upper edge)
+        h.observe(0.5); // ≤ 1.0
+        h.observe(10.0); // ≤ 10.0
+        h.observe(11.0); // +Inf
+        assert_eq!(h.bucket_counts(), vec![2, 1, 1, 1]);
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 21.65).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_drops_non_finite() {
+        let r = Registry::new();
+        let h = r.histogram_with_buckets("h", &[], &[1.0]);
+        h.observe(f64::NAN);
+        h.observe(f64::INFINITY);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn histogram_concurrent_observes() {
+        let r = Registry::new();
+        let h = r.histogram_with_buckets("h", &[], &[0.5]);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let h = h.clone();
+                s.spawn(move || {
+                    for i in 0..1000 {
+                        h.observe(if i % 2 == 0 { 0.25 } else { 0.75 });
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 4000);
+        assert_eq!(h.bucket_counts(), vec![2000, 2000]);
+        assert!((h.sum() - 2000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn type_mismatch_panics() {
+        let r = Registry::new();
+        let _ = r.counter("m", &[]);
+        let _ = r.gauge("m", &[]);
+    }
+
+    #[test]
+    fn snapshot_sorted_and_complete() {
+        let r = Registry::new();
+        r.counter("b_total", &[]).inc();
+        r.gauge("a_gauge", &[]).set(2.0);
+        let snaps = r.snapshot();
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps[0].0.name, "a_gauge");
+        assert_eq!(snaps[1].0.name, "b_total");
+        match &snaps[1].1 {
+            Snapshot::Counter(1) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+}

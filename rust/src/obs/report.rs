@@ -1,0 +1,319 @@
+//! Offline analysis of a captured JSONL trace (see [`crate::obs::sink`]
+//! for the event schema): parse the events back and render the
+//! phase-summary and per-level tables the paper's figures are built
+//! from, via [`crate::metrics::Table`].
+//!
+//! The parser is a hand-rolled scanner for exactly the JSON subset the
+//! sink emits (flat object, string/number fields, one `labels` string
+//! map) — std-only, like the rest of the subsystem.
+
+use crate::metrics::Table;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// One parsed span event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub name: String,
+    pub tid: u64,
+    pub ts_us: f64,
+    pub dur_us: f64,
+    pub labels: Vec<(String, String)>,
+}
+
+impl TraceEvent {
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Parse one JSONL line. Returns `None` for blank lines or lines that
+/// don't match the sink's schema.
+pub fn parse_line(line: &str) -> Option<TraceEvent> {
+    let line = line.trim();
+    if line.is_empty() {
+        return None;
+    }
+    let name = extract_string(line, "\"name\":\"")?;
+    let tid = extract_number(line, "\"tid\":")? as u64;
+    let ts_us = extract_number(line, "\"ts_us\":")?;
+    let dur_us = extract_number(line, "\"dur_us\":")?;
+    let labels = match line.find("\"labels\":{") {
+        Some(at) => parse_label_map(&line[at + "\"labels\":{".len()..]),
+        None => Vec::new(),
+    };
+    Some(TraceEvent { name, tid, ts_us, dur_us, labels })
+}
+
+/// Read every parseable event from a trace file.
+pub fn read_trace(path: &str) -> Result<Vec<TraceEvent>> {
+    let body =
+        std::fs::read_to_string(path).with_context(|| format!("reading trace file {path}"))?;
+    Ok(body.lines().filter_map(parse_line).collect())
+}
+
+/// Render the full report for a trace file: a per-phase summary table
+/// plus, when the trace contains `pkt.level` events, the per-level
+/// breakdown (edges peeled, sub-levels, time) of Figs. 4–6.
+pub fn render_trace_report(path: &str) -> Result<String> {
+    let events = read_trace(path)?;
+    anyhow::ensure!(!events.is_empty(), "trace {path} contains no span events");
+    let mut out = String::new();
+
+    // --- phase summary: aggregate by span name ---
+    let mut phases: BTreeMap<&str, (u64, f64, f64)> = BTreeMap::new();
+    for ev in &events {
+        let slot = phases.entry(ev.name.as_str()).or_insert((0, 0.0, 0.0));
+        slot.0 += 1;
+        slot.1 += ev.dur_us;
+        slot.2 = slot.2.max(ev.dur_us);
+    }
+    let mut t = Table::new(&["phase", "count", "total_s", "mean_s", "max_s"]);
+    for (name, (count, total_us, max_us)) in &phases {
+        t.row(vec![
+            name.to_string(),
+            count.to_string(),
+            format!("{:.6}", total_us * 1e-6),
+            format!("{:.6}", total_us * 1e-6 / *count as f64),
+            format!("{:.6}", max_us * 1e-6),
+        ]);
+    }
+    out.push_str("phase summary\n");
+    out.push_str(&t.render());
+
+    // --- per-level breakdown from pkt.level events ---
+    // Aggregated by level label, so a trace holding several PKT runs
+    // reports per-level totals across runs.
+    let mut levels: BTreeMap<u64, (u64, u64, f64)> = BTreeMap::new();
+    for ev in events.iter().filter(|e| e.name == "pkt.level") {
+        let level: u64 = match ev.label("level").and_then(|v| v.parse().ok()) {
+            Some(l) => l,
+            None => continue,
+        };
+        let edges: u64 = ev.label("edges").and_then(|v| v.parse().ok()).unwrap_or(0);
+        let subs: u64 = ev.label("sublevels").and_then(|v| v.parse().ok()).unwrap_or(0);
+        let slot = levels.entry(level).or_insert((0, 0, 0.0));
+        slot.0 += edges;
+        slot.1 += subs;
+        slot.2 += ev.dur_us;
+    }
+    if !levels.is_empty() {
+        let total_level_us: f64 = levels.values().map(|v| v.2).sum();
+        let mut cum_us = 0.0;
+        let mut t = Table::new(&["level", "k", "edges", "sublevels", "time_s", "cdf_%"]);
+        for (level, (edges, subs, dur_us)) in &levels {
+            cum_us += dur_us;
+            t.row(vec![
+                level.to_string(),
+                (level + 2).to_string(),
+                edges.to_string(),
+                subs.to_string(),
+                format!("{:.6}", dur_us * 1e-6),
+                format!("{:.1}", 100.0 * cum_us / total_level_us.max(1e-12)),
+            ]);
+        }
+        out.push_str("\npkt levels\n");
+        out.push_str(&t.render());
+    }
+
+    // --- totals: the same quantities PktStats reports ---
+    let sum_us = |name: &str| -> f64 {
+        events.iter().filter(|e| e.name == name).map(|e| e.dur_us).sum()
+    };
+    let support = sum_us("pkt.support") * 1e-6;
+    let peel = sum_us("pkt.peel") * 1e-6;
+    let scan = sum_us("pkt.scan") * 1e-6;
+    let process = sum_us("pkt.process") * 1e-6;
+    if support > 0.0 || peel > 0.0 {
+        out.push_str(&format!(
+            "\ntotals: support={support:.6}s scan={scan:.6}s process={process:.6}s \
+             peel={peel:.6}s total={:.6}s\n",
+            support + peel
+        ));
+    }
+    Ok(out)
+}
+
+/// Extract the string value following `pat`, unescaping JSON escapes.
+fn extract_string(line: &str, pat: &str) -> Option<String> {
+    let start = line.find(pat)? + pat.len();
+    let mut out = String::new();
+    let mut chars = line[start..].chars();
+    loop {
+        match chars.next()? {
+            '"' => return Some(out),
+            '\\' => match chars.next()? {
+                'n' => out.push('\n'),
+                'r' => out.push('\r'),
+                't' => out.push('\t'),
+                'u' => {
+                    let hex: String = chars.by_ref().take(4).collect();
+                    let code = u32::from_str_radix(&hex, 16).ok()?;
+                    out.push(char::from_u32(code)?);
+                }
+                c => out.push(c),
+            },
+            c => out.push(c),
+        }
+    }
+}
+
+/// Extract the number following `pat` (digits, sign, dot, exponent).
+fn extract_number(line: &str, pat: &str) -> Option<f64> {
+    let start = line.find(pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || matches!(c, '-' | '+' | '.' | 'e' | 'E')))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Parse `"k":"v",...}` (cursor just past the opening brace).
+fn parse_label_map(mut rest: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    loop {
+        rest = rest.trim_start_matches(',');
+        if rest.starts_with('}') || rest.is_empty() {
+            return out;
+        }
+        let Some(key_end) = scan_string(rest) else { return out };
+        let key = unescape(&rest[1..key_end]);
+        rest = &rest[key_end + 1..];
+        let Some(stripped) = rest.strip_prefix(':') else { return out };
+        rest = stripped;
+        let Some(val_end) = scan_string(rest) else { return out };
+        let val = unescape(&rest[1..val_end]);
+        rest = &rest[val_end + 1..];
+        out.push((key, val));
+    }
+}
+
+/// For input starting with `"`, return the byte index of the closing
+/// unescaped quote.
+fn scan_string(s: &str) -> Option<usize> {
+    if !s.starts_with('"') {
+        return None;
+    }
+    let bytes = s.as_bytes();
+    let mut i = 1;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'"' => return Some(i),
+            b'\\' => i += 2,
+            _ => i += 1,
+        }
+    }
+    None
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('r') => out.push('\r'),
+            Some('t') => out.push('\t'),
+            Some('u') => {
+                let hex: String = chars.by_ref().take(4).collect();
+                if let Some(c) = u32::from_str_radix(&hex, 16).ok().and_then(char::from_u32) {
+                    out.push(c);
+                }
+            }
+            Some(c) => out.push(c),
+            None => {}
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_event() {
+        let ev = parse_line("{\"name\":\"pkt.scan\",\"tid\":2,\"ts_us\":10.500,\"dur_us\":3.250}")
+            .unwrap();
+        assert_eq!(ev.name, "pkt.scan");
+        assert_eq!(ev.tid, 2);
+        assert!((ev.ts_us - 10.5).abs() < 1e-9);
+        assert!((ev.dur_us - 3.25).abs() < 1e-9);
+        assert!(ev.labels.is_empty());
+    }
+
+    #[test]
+    fn parse_event_with_labels() {
+        let ev = parse_line(
+            "{\"name\":\"pkt.level\",\"tid\":0,\"ts_us\":1.000,\"dur_us\":2.000,\
+             \"labels\":{\"level\":\"3\",\"edges\":\"1021\"}}",
+        )
+        .unwrap();
+        assert_eq!(ev.label("level"), Some("3"));
+        assert_eq!(ev.label("edges"), Some("1021"));
+        assert_eq!(ev.label("missing"), None);
+    }
+
+    #[test]
+    fn parse_roundtrips_escapes() {
+        let ev = parse_line(
+            "{\"name\":\"a\\\"b\",\"tid\":0,\"ts_us\":0.000,\"dur_us\":0.000,\
+             \"labels\":{\"k\":\"x\\\\y\\nz\"}}",
+        )
+        .unwrap();
+        assert_eq!(ev.name, "a\"b");
+        assert_eq!(ev.label("k"), Some("x\\y\nz"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_line("").is_none());
+        assert!(parse_line("not json").is_none());
+        assert!(parse_line("{\"name\":\"x\"}").is_none());
+    }
+
+    #[test]
+    fn report_renders_phase_and_level_tables() {
+        let path = std::env::temp_dir().join("trussx_report_test.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(
+            &path,
+            "{\"name\":\"pkt.support\",\"tid\":0,\"ts_us\":0.000,\"dur_us\":1000.000}\n\
+             {\"name\":\"pkt.level\",\"tid\":0,\"ts_us\":1000.000,\"dur_us\":600.000,\
+             \"labels\":{\"level\":\"0\",\"edges\":\"10\",\"sublevels\":\"2\"}}\n\
+             {\"name\":\"pkt.level\",\"tid\":0,\"ts_us\":1600.000,\"dur_us\":400.000,\
+             \"labels\":{\"level\":\"1\",\"edges\":\"4\",\"sublevels\":\"1\"}}\n\
+             {\"name\":\"pkt.peel\",\"tid\":0,\"ts_us\":1000.000,\"dur_us\":1100.000}\n",
+        )
+        .unwrap();
+        let report = render_trace_report(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(report.contains("phase summary"), "{report}");
+        assert!(report.contains("pkt levels"), "{report}");
+        // level 0 row: level=0, k=2, edges=10, sublevels=2, time=600µs, cdf=60%
+        let levels_section = &report[report.find("pkt levels").unwrap()..];
+        let row0: Vec<String> = levels_section
+            .lines()
+            .find(|l| l.starts_with('|') && l.contains("0.000600"))
+            .unwrap_or_else(|| panic!("level-0 row missing: {report}"))
+            .split('|')
+            .map(|c| c.trim().to_string())
+            .filter(|c| !c.is_empty())
+            .collect();
+        assert_eq!(row0, vec!["0", "2", "10", "2", "0.000600", "60.0"], "{report}");
+        assert!(report.contains("totals: support=0.001000s"), "{report}");
+        assert!(report.contains("total=0.002100s"), "{report}");
+    }
+
+    #[test]
+    fn report_errors_on_missing_file() {
+        assert!(render_trace_report("/nonexistent/trace.jsonl").is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! JSONL trace-event sink. Disabled by default; enabled by the
+//! `TRUSSX_TRACE=<path>` environment variable or the `--trace <path>`
+//! CLI flag (which calls [`set_path`]). One event is appended per span
+//! close:
+//!
+//! ```json
+//! {"name":"pkt.scan","tid":0,"ts_us":1234.567,"dur_us":89.012,"labels":{"level":"3"}}
+//! ```
+//!
+//! `ts_us` is microseconds since the process span epoch, `dur_us` the
+//! span duration in microseconds; both carry nanosecond resolution in
+//! their fractional part. Writes are line-atomic (one mutex-guarded
+//! `writeln!` per event), so traces from parallel regions interleave
+//! but never tear.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+fn cell() -> &'static Mutex<Option<BufWriter<File>>> {
+    static SINK: OnceLock<Mutex<Option<BufWriter<File>>>> = OnceLock::new();
+    SINK.get_or_init(|| {
+        let init = match std::env::var("TRUSSX_TRACE") {
+            Ok(path) if !path.is_empty() => File::create(&path).ok().map(BufWriter::new),
+            _ => None,
+        };
+        Mutex::new(init)
+    })
+}
+
+fn lock() -> MutexGuard<'static, Option<BufWriter<File>>> {
+    cell().lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Route trace events to `path` (truncating it). Replaces and flushes
+/// any previously configured sink.
+pub fn set_path(path: &str) -> std::io::Result<()> {
+    let file = File::create(path)?;
+    let mut guard = lock();
+    if let Some(mut old) = guard.take() {
+        let _ = old.flush();
+    }
+    *guard = Some(BufWriter::new(file));
+    Ok(())
+}
+
+/// Flush and drop the sink; subsequent span closes emit nothing.
+pub fn disable() {
+    let mut guard = lock();
+    if let Some(mut w) = guard.take() {
+        let _ = w.flush();
+    }
+}
+
+/// Flush buffered events to disk (sink stays active).
+pub fn flush() {
+    if let Some(w) = lock().as_mut() {
+        let _ = w.flush();
+    }
+}
+
+/// Whether a sink is currently attached.
+pub fn enabled() -> bool {
+    lock().is_some()
+}
+
+/// Append one span event. No-op when the sink is disabled.
+pub fn emit(name: &str, tid: u64, ts_us: f64, dur_us: f64, labels: &[(String, String)]) {
+    let mut guard = lock();
+    let Some(w) = guard.as_mut() else { return };
+    let mut line = String::with_capacity(96);
+    line.push_str("{\"name\":\"");
+    push_json_escaped(&mut line, name);
+    line.push_str("\",\"tid\":");
+    line.push_str(&tid.to_string());
+    line.push_str(",\"ts_us\":");
+    line.push_str(&format!("{ts_us:.3}"));
+    line.push_str(",\"dur_us\":");
+    line.push_str(&format!("{dur_us:.3}"));
+    if !labels.is_empty() {
+        line.push_str(",\"labels\":{");
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push('"');
+            push_json_escaped(&mut line, k);
+            line.push_str("\":\"");
+            push_json_escaped(&mut line, v);
+            line.push('"');
+        }
+        line.push('}');
+    }
+    line.push('}');
+    let _ = writeln!(w, "{line}");
+}
+
+fn push_json_escaped(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The sink is process-global; serialize the tests that reconfigure it.
+    static SINK_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn emit_writes_jsonl_lines() {
+        let _guard = SINK_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let path = std::env::temp_dir().join("trussx_sink_test_emit.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        set_path(&path).unwrap();
+        assert!(enabled());
+        emit("test.sink.a", 3, 10.0, 2.5, &[]);
+        emit(
+            "test.sink.b",
+            0,
+            12.5,
+            1.0,
+            &[("level".to_string(), "4".to_string())],
+        );
+        disable();
+        assert!(!enabled());
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().filter(|l| l.contains("test.sink.")).collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(
+            lines[0],
+            "{\"name\":\"test.sink.a\",\"tid\":3,\"ts_us\":10.000,\"dur_us\":2.500}"
+        );
+        assert_eq!(
+            lines[1],
+            "{\"name\":\"test.sink.b\",\"tid\":0,\"ts_us\":12.500,\"dur_us\":1.000,\"labels\":{\"level\":\"4\"}}"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn emit_escapes_json_specials() {
+        let _guard = SINK_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let path = std::env::temp_dir().join("trussx_sink_test_escape.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        set_path(&path).unwrap();
+        emit(
+            "test.sink.esc",
+            0,
+            0.0,
+            0.0,
+            &[("k".to_string(), "a\"b\\c\nd".to_string())],
+        );
+        disable();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let line = body.lines().find(|l| l.contains("test.sink.esc")).unwrap();
+        assert!(line.contains("a\\\"b\\\\c\\nd"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn emit_without_sink_is_noop() {
+        let _guard = SINK_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        disable();
+        emit("test.sink.noop", 0, 0.0, 0.0, &[]);
+    }
+}

@@ -1,0 +1,150 @@
+//! RAII phase spans: scoped wall-clock timers with a stable thread
+//! ordinal and monotonic process-relative timestamps. Spans nest freely
+//! (each is an independent measurement), feed the per-phase duration
+//! histogram `phase_seconds{phase=...}` in the global registry, and —
+//! when the trace sink is enabled — emit one JSONL event per close.
+//!
+//! Dynamic labels (`level=3`, `edges=1021`, ...) go to the trace event
+//! only, never to the registry, so metric cardinality stays bounded by
+//! the set of phase names.
+
+use crate::obs::registry::{global, Histogram};
+use crate::obs::sink;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Instant the process first touched the span subsystem; all trace
+/// timestamps are microseconds since this epoch.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Stable small ordinal for the calling thread (assigned on first use,
+/// in first-touch order — not the OS thread id).
+pub fn thread_ord() -> u64 {
+    TID.with(|t| *t)
+}
+
+/// An open phase span. Close with [`Span::close`] to get the elapsed
+/// seconds; dropping it unclosed records the measurement too.
+pub struct Span {
+    name: &'static str,
+    labels: Vec<(String, String)>,
+    tid: u64,
+    start: Instant,
+    start_us: f64,
+    hist: Histogram,
+    done: bool,
+}
+
+/// Open a span for `name`.
+pub fn span(name: &'static str) -> Span {
+    span_with(name, &[])
+}
+
+/// Open a span carrying extra trace-only labels. More labels can be
+/// attached later with [`Span::label`].
+pub fn span_with(name: &'static str, labels: &[(&str, &str)]) -> Span {
+    let ep = epoch();
+    let start = Instant::now();
+    Span {
+        name,
+        labels: labels.iter().map(|&(k, v)| (k.to_string(), v.to_string())).collect(),
+        tid: thread_ord(),
+        start,
+        start_us: start.duration_since(ep).as_secs_f64() * 1e6,
+        hist: global().histogram("phase_seconds", &[("phase", name)]),
+        done: false,
+    }
+}
+
+impl Span {
+    /// Attach a trace-only label before the span closes.
+    pub fn label(&mut self, key: &str, value: &str) {
+        self.labels.push((key.to_string(), value.to_string()));
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Close the span, recording its duration; returns elapsed seconds.
+    pub fn close(mut self) -> f64 {
+        self.finish()
+    }
+
+    fn finish(&mut self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if self.done {
+            return secs;
+        }
+        self.done = true;
+        self.hist.observe(secs);
+        sink::emit(self.name, self.tid, self.start_us, secs * 1e6, &self.labels);
+        secs
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.done {
+            self.finish();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn close_returns_elapsed_and_records() {
+        let before = global().histogram("phase_seconds", &[("phase", "test.span.close")]).count();
+        let sp = span("test.span.close");
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        let secs = sp.close();
+        assert!(secs >= 0.001);
+        let after = global().histogram("phase_seconds", &[("phase", "test.span.close")]).count();
+        assert_eq!(after, before + 1);
+    }
+
+    #[test]
+    fn drop_records_once() {
+        let h = global().histogram("phase_seconds", &[("phase", "test.span.drop")]);
+        let before = h.count();
+        {
+            let _sp = span("test.span.drop");
+        }
+        assert_eq!(h.count(), before + 1);
+    }
+
+    #[test]
+    fn nested_spans_record_independently() {
+        let outer_h = global().histogram("phase_seconds", &[("phase", "test.span.outer")]);
+        let inner_h = global().histogram("phase_seconds", &[("phase", "test.span.inner")]);
+        let (ob, ib) = (outer_h.count(), inner_h.count());
+        let outer = span("test.span.outer");
+        let inner = span("test.span.inner");
+        let inner_secs = inner.close();
+        let outer_secs = outer.close();
+        assert!(outer_secs >= inner_secs);
+        assert_eq!(outer_h.count(), ob + 1);
+        assert_eq!(inner_h.count(), ib + 1);
+    }
+
+    #[test]
+    fn thread_ordinals_are_distinct() {
+        let here = thread_ord();
+        let there = std::thread::spawn(thread_ord).join().unwrap();
+        assert_ne!(here, there);
+        assert_eq!(here, thread_ord(), "stable within a thread");
+    }
+}

@@ -15,8 +15,9 @@
 
 use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Barrier;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Barrier, OnceLock};
+use std::time::Instant;
 
 /// Default chunk sizes from the paper's §4.1 (support computation: 10,
 /// edge processing: 4).
@@ -24,6 +25,42 @@ pub const CHUNK_SUPPORT: usize = 10;
 pub const CHUNK_PROCESS: usize = 4;
 /// Thread-local frontier buffer size (`buff` in Alg. 4/5).
 pub const BUFF_SIZE: usize = 256;
+
+/// Load-imbalance ratio buckets (max-items / mean-items per region):
+/// 1.0 is perfect balance, the tail captures pathological skew.
+const IMBALANCE_BUCKETS: &[f64] = &[1.0, 1.02, 1.05, 1.1, 1.2, 1.5, 2.0, 3.0, 5.0, 10.0];
+
+/// Cached handles into the global metric registry — looked up once,
+/// then updated lock-free from inside regions.
+struct ParObs {
+    regions: crate::obs::Counter,
+    chunks: crate::obs::Counter,
+    items: crate::obs::Counter,
+    barrier_waits: crate::obs::Counter,
+    barrier_secs: crate::obs::Histogram,
+    imbalance: crate::obs::Gauge,
+    imbalance_hist: crate::obs::Histogram,
+}
+
+fn par_obs() -> &'static ParObs {
+    static OBS: OnceLock<ParObs> = OnceLock::new();
+    OBS.get_or_init(|| {
+        let r = crate::obs::global();
+        ParObs {
+            regions: r.counter("par_regions_total", &[]),
+            chunks: r.counter("par_chunks_dispatched_total", &[]),
+            items: r.counter("par_items_total", &[]),
+            barrier_waits: r.counter("par_barrier_waits_total", &[]),
+            barrier_secs: r.histogram("par_barrier_wait_seconds", &[]),
+            imbalance: r.gauge("par_load_imbalance", &[]),
+            imbalance_hist: r.histogram_with_buckets(
+                "par_load_imbalance_ratio",
+                &[],
+                IMBALANCE_BUCKETS,
+            ),
+        }
+    })
+}
 
 /// A parallel execution pool. Threads are spawned per region (scoped),
 /// so a `Pool` is just a thread-count policy object; persistent state
@@ -66,20 +103,37 @@ impl Pool {
         F: Fn(&RegionCtx) + Sync,
     {
         let t = self.nthreads;
+        let obs = par_obs();
+        obs.regions.inc();
         let barrier = Barrier::new(t);
+        let item_counts: Vec<AtomicU64> = (0..t).map(|_| AtomicU64::new(0)).collect();
         if t == 1 {
-            f(&RegionCtx { tid: 0, nthreads: 1, barrier: &barrier });
-            return;
+            f(&RegionCtx { tid: 0, nthreads: 1, barrier: &barrier, items: &item_counts[0] });
+        } else {
+            std::thread::scope(|scope| {
+                for tid in 0..t {
+                    let f = &f;
+                    let barrier = &barrier;
+                    let items = &item_counts[tid];
+                    scope.spawn(move || {
+                        f(&RegionCtx { tid, nthreads: t, barrier, items });
+                    });
+                }
+            });
         }
-        std::thread::scope(|scope| {
-            for tid in 0..t {
-                let f = &f;
-                let barrier = &barrier;
-                scope.spawn(move || {
-                    f(&RegionCtx { tid, nthreads: t, barrier });
-                });
+        // per-region load accounting: total items done, and how far the
+        // busiest thread ran ahead of the mean (1.0 = perfectly balanced)
+        let per_thread: Vec<u64> = item_counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = per_thread.iter().sum();
+        if total > 0 {
+            obs.items.add(total);
+            if t > 1 {
+                let max = *per_thread.iter().max().unwrap_or(&0);
+                let ratio = max as f64 * t as f64 / total as f64;
+                obs.imbalance.set(ratio);
+                obs.imbalance_hist.observe(ratio);
             }
-        });
+        }
     }
 
     /// One-shot dynamic parallel-for over `0..total` (its own region).
@@ -88,8 +142,8 @@ impl Pool {
         F: Fn(usize) + Sync,
     {
         let counter = AtomicUsize::new(0);
-        self.region(|_ctx| {
-            dynamic_items(&counter, total, chunk, &f);
+        self.region(|ctx| {
+            dynamic_items(&counter, total, chunk, ctx.items, &f);
         });
     }
 }
@@ -99,13 +153,21 @@ pub struct RegionCtx<'a> {
     pub tid: usize,
     pub nthreads: usize,
     barrier: &'a Barrier,
+    /// Items this thread has executed in this region (load accounting;
+    /// fed by `for_dynamic` / `for_static`).
+    items: &'a AtomicU64,
 }
 
 impl RegionCtx<'_> {
-    /// OpenMP `barrier`.
+    /// OpenMP `barrier`. Counted and timed: waiting at a barrier is
+    /// exactly the load-imbalance cost the paper's §4 discusses.
     #[inline]
     pub fn barrier(&self) {
+        let obs = par_obs();
+        obs.barrier_waits.inc();
+        let t0 = Instant::now();
         self.barrier.wait();
+        obs.barrier_secs.observe(t0.elapsed().as_secs_f64());
     }
 
     /// `schedule(dynamic, chunk)` over `0..total`, driven by a shared
@@ -115,7 +177,7 @@ impl RegionCtx<'_> {
     where
         F: FnMut(usize),
     {
-        dynamic_items(&counter.0, total, chunk, f);
+        dynamic_items(&counter.0, total, chunk, self.items, f);
     }
 
     /// `schedule(static)` over `0..total`: thread `tid` gets the
@@ -138,24 +200,36 @@ impl RegionCtx<'_> {
         for i in lo..hi {
             f(i);
         }
+        if hi > lo {
+            self.items.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+        }
     }
 }
 
 #[inline]
-fn dynamic_items<F>(counter: &AtomicUsize, total: usize, chunk: usize, mut f: F)
+fn dynamic_items<F>(counter: &AtomicUsize, total: usize, chunk: usize, items: &AtomicU64, mut f: F)
 where
     F: FnMut(usize),
 {
     let chunk = chunk.max(1);
+    let obs = par_obs();
+    let mut done = 0u64;
+    let mut chunks = 0u64;
     loop {
         let start = counter.fetch_add(chunk, Ordering::Relaxed);
         if start >= total {
             break;
         }
         let end = (start + chunk).min(total);
+        chunks += 1;
+        done += (end - start) as u64;
         for i in start..end {
             f(i);
         }
+    }
+    if chunks > 0 {
+        obs.chunks.add(chunks);
+        items.fetch_add(done, Ordering::Relaxed);
     }
 }
 
@@ -303,7 +377,6 @@ mod tests {
     #[test]
     fn single_thread_region_inline() {
         let pool = Pool::new(1);
-        let mut hit = false;
         // would not compile with FnMut across threads; single-thread path
         // still must run exactly once
         let hit_cell = std::sync::atomic::AtomicBool::new(false);
@@ -311,8 +384,7 @@ mod tests {
             assert_eq!(ctx.nthreads, 1);
             hit_cell.store(true, Ordering::Relaxed);
         });
-        hit = hit_cell.load(Ordering::Relaxed);
-        assert!(hit);
+        assert!(hit_cell.load(Ordering::Relaxed));
     }
 
     #[test]
@@ -332,7 +404,12 @@ mod tests {
         let ctxs: Vec<(usize, usize)> = {
             let out: Vec<_> = (0..3)
                 .map(|tid| {
-                    let ctx = RegionCtx { tid, nthreads: 3, barrier: &Barrier::new(1) };
+                    let ctx = RegionCtx {
+                        tid,
+                        nthreads: 3,
+                        barrier: &Barrier::new(1),
+                        items: &AtomicU64::new(0),
+                    };
                     ctx.static_range(10)
                 })
                 .collect();
@@ -340,6 +417,31 @@ mod tests {
         };
         let _ = pool;
         assert_eq!(ctxs, vec![(0, 4), (4, 8), (8, 10)]);
+    }
+
+    #[test]
+    fn regions_record_work_metrics() {
+        // the registry is process-global and shared with other tests, so
+        // assert monotone deltas rather than absolute values
+        let obs = par_obs();
+        let (r0, i0, c0, b0) = (
+            obs.regions.get(),
+            obs.items.get(),
+            obs.chunks.get(),
+            obs.barrier_waits.get(),
+        );
+        let pool = Pool::new(3);
+        let total = 1000;
+        pool.for_dynamic(total, 7, |_| {});
+        pool.region(|ctx| {
+            ctx.for_static(total, |_| {});
+            ctx.barrier();
+        });
+        // other tests may run concurrently, so the deltas are lower bounds
+        assert!(obs.regions.get() - r0 >= 2);
+        assert!(obs.items.get() - i0 >= 2 * total as u64);
+        assert!(obs.chunks.get() - c0 >= total.div_ceil(7) as u64);
+        assert!(obs.barrier_waits.get() - b0 >= 3, "one wait per thread");
     }
 
     #[test]

@@ -51,6 +51,7 @@ fn merge_count(a: &[Vertex], b: &[Vertex]) -> u64 {
 /// bookkeeping and atomics, so its work is Θ(m + Σ_v d⁺(v)²) and
 /// Table 2's ordering experiment measures what the paper measured.
 pub fn count_triangles_par(g: &Graph, pool: &Pool) -> u64 {
+    let _sp = crate::obs::span("triangle.count_par");
     let n = g.n();
     let total = AtomicU64::new(0);
     let counter = Counter::new();
@@ -100,6 +101,7 @@ pub fn count_triangles_par(g: &Graph, pool: &Pool) -> u64 {
 /// each triangle exactly once in the canonical form `v < u < w`, and the
 /// three member edges get one atomic increment each.
 pub fn support_am4(eg: &EdgeGraph, pool: &Pool) -> Vec<AtomicU32> {
+    let _sp = crate::obs::span("triangle.support_am4");
     let n = eg.n();
     let m = eg.m();
     let g = &eg.g;
@@ -149,6 +151,7 @@ pub fn support_am4(eg: &EdgeGraph, pool: &Pool) -> Vec<AtomicU32> {
 /// processes whole edges, so `S[e]` needs no atomics; the cost is the
 /// orientation-oblivious Θ(Σ_e d(u)+d(v)) work bound.
 pub fn support_ros(eg: &EdgeGraph, pool: &Pool) -> Vec<u32> {
+    let _sp = crate::obs::span("triangle.support_ros");
     let n = eg.n();
     let m = eg.m();
     let g = &eg.g;

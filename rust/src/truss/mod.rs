@@ -13,8 +13,9 @@
 //!   hash-free peeling over the edge-id representation;
 //! - [`local`] — h-index local-update iteration (Sariyüce et al. [19] /
 //!   MPM [34] style), the synchronization-free alternative;
-//! - [`dense`] — XLA dense-block decomposition through the AOT
-//!   Pallas/JAX artifacts (the Graphulo-style linear-algebra sibling).
+//! - `dense` — XLA dense-block decomposition through the AOT
+//!   Pallas/JAX artifacts (the Graphulo-style linear-algebra sibling);
+//!   only built with the off-by-default `xla` cargo feature.
 
 mod cohen;
 mod local;
@@ -22,6 +23,7 @@ mod pkt;
 mod query;
 mod ros;
 mod wc;
+#[cfg(feature = "xla")]
 pub mod dense;
 pub mod external;
 

@@ -12,10 +12,10 @@
 //! processed exactly once — the work-efficiency argument of §3.
 
 use crate::graph::{EdgeGraph, EdgeId};
+use crate::obs;
 use crate::par::{AtomicVec, BatchWriter, Counter, Pool, CHUNK_PROCESS};
 use crate::triangle::support_am4;
 use std::sync::atomic::{AtomicBool, AtomicI32, AtomicI64, AtomicU64, Ordering};
-use std::time::Instant;
 
 /// Per-level timing/size record (drives Fig. 6).
 #[derive(Clone, Debug)]
@@ -31,11 +31,20 @@ pub struct LevelStat {
 }
 
 /// Phase breakdown and level statistics for one PKT run (Figs. 4–6).
+///
+/// Every duration here is derived from `obs` spans (`pkt.support`,
+/// `pkt.peel`, `pkt.scan`, `pkt.process`, `pkt.level`), so the struct
+/// always agrees with what the registry histograms and the trace sink
+/// record for the same run.
 #[derive(Clone, Debug, Default)]
 pub struct PktStats {
     pub support_secs: f64,
     pub scan_secs: f64,
     pub process_secs: f64,
+    /// Sum of all `pkt.level` span durations, including levels that
+    /// peeled nothing (unlike `per_level`, which keeps only non-empty
+    /// levels for Fig. 6).
+    pub levels_secs: f64,
     pub total_secs: f64,
     pub levels: u32,
     pub sublevels: u64,
@@ -53,9 +62,9 @@ pub struct TrussResult {
 /// Run PKT: AM4 support computation followed by level-synchronous
 /// parallel peeling.
 pub fn pkt(eg: &EdgeGraph, pool: &Pool) -> TrussResult {
-    let t0 = Instant::now();
+    let sp = obs::span("pkt.support");
     let s_u32 = support_am4(eg, pool);
-    let support_secs = t0.elapsed().as_secs_f64();
+    let support_secs = sp.close();
     let s: Vec<AtomicI32> = s_u32
         .into_iter()
         .map(|a| AtomicI32::new(a.into_inner() as i32))
@@ -73,7 +82,7 @@ pub fn pkt_with_support(eg: &EdgeGraph, pool: &Pool, s: Vec<AtomicI32>) -> Truss
     let n = eg.n();
     let m = eg.m();
     let g = &eg.g;
-    let t0 = Instant::now();
+    let sp_peel = obs::span("pkt.peel");
 
     let processed: Vec<AtomicBool> = (0..m).map(|_| AtomicBool::new(false)).collect();
     // membership flags for the two flip-flopped frontiers
@@ -84,9 +93,11 @@ pub fn pkt_with_support(eg: &EdgeGraph, pool: &Pool, s: Vec<AtomicI32>) -> Truss
 
     let todo = AtomicI64::new(m as i64);
     let proc_counter = Counter::new();
-    // phase timers (nanoseconds), written by tid 0 between barriers
+    // phase accumulators (nanoseconds), fed from tid-0 spans between
+    // barriers; the same spans drive the registry histograms and trace
     let scan_ns = AtomicU64::new(0);
     let process_ns = AtomicU64::new(0);
+    let levels_ns = AtomicU64::new(0);
     let sublevel_count = AtomicU64::new(0);
     let level_count = AtomicU64::new(0);
     let per_level = std::sync::Mutex::new(Vec::<LevelStat>::new());
@@ -95,9 +106,14 @@ pub fn pkt_with_support(eg: &EdgeGraph, pool: &Pool, s: Vec<AtomicI32>) -> Truss
         let mut x = vec![0u32; n]; // thread-local marking array (u32 slots: cache-friendlier)
         let mut level: i32 = 0;
         while todo.load(Ordering::Acquire) > 0 {
-            let level_t0 = Instant::now();
+            let mut sp_level: Option<obs::Span> = None;
+            let mut sp_scan: Option<obs::Span> = None;
+            if ctx.tid == 0 {
+                let lvl = level.to_string();
+                sp_level = Some(obs::span_with("pkt.level", &[("level", &lvl)]));
+                sp_scan = Some(obs::span("pkt.scan"));
+            }
             // ---- SCAN: static schedule over S (paper §4.1) ----
-            let scan_t0 = Instant::now();
             {
                 let mut w = BatchWriter::new(&front_a);
                 let (lo, hi) = ctx.static_range(m);
@@ -111,8 +127,8 @@ pub fn pkt_with_support(eg: &EdgeGraph, pool: &Pool, s: Vec<AtomicI32>) -> Truss
                 }
             }
             ctx.barrier();
-            if ctx.tid == 0 {
-                scan_ns.fetch_add(scan_t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            if let Some(sp) = sp_scan {
+                scan_ns.fetch_add(secs_to_ns(sp.close()), Ordering::Relaxed);
             }
 
             // ---- sub-level expansion ----
@@ -135,7 +151,7 @@ pub fn pkt_with_support(eg: &EdgeGraph, pool: &Pool, s: Vec<AtomicI32>) -> Truss
                     todo.fetch_sub(cur_len as i64, Ordering::AcqRel);
                     sublevel_count.fetch_add(1, Ordering::Relaxed);
                 }
-                let proc_t0 = Instant::now();
+                let sp_proc = if ctx.tid == 0 { Some(obs::span("pkt.process")) } else { None };
                 {
                     let cur_slice = cur.as_slice();
                     let mut w = BatchWriter::new(nxt);
@@ -148,9 +164,8 @@ pub fn pkt_with_support(eg: &EdgeGraph, pool: &Pool, s: Vec<AtomicI32>) -> Truss
                     });
                 }
                 ctx.barrier();
-                if ctx.tid == 0 {
-                    process_ns
-                        .fetch_add(proc_t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                if let Some(sp) = sp_proc {
+                    process_ns.fetch_add(secs_to_ns(sp.close()), Ordering::Relaxed);
                 }
                 // retire the current frontier: mark processed, clear flags
                 {
@@ -175,12 +190,21 @@ pub fn pkt_with_support(eg: &EdgeGraph, pool: &Pool, s: Vec<AtomicI32>) -> Truss
                 front_a.clear();
                 front_b.clear();
                 level_count.fetch_add(1, Ordering::Relaxed);
+                let level_secs = sp_level
+                    .take()
+                    .map(|mut sp| {
+                        sp.label("edges", &level_edges.to_string());
+                        sp.label("sublevels", &level_subs.to_string());
+                        sp.close()
+                    })
+                    .unwrap_or(0.0);
+                levels_ns.fetch_add(secs_to_ns(level_secs), Ordering::Relaxed);
                 if level_edges > 0 {
                     per_level.lock().unwrap().push(LevelStat {
                         level: level as u32,
                         edges: level_edges,
                         sublevels: level_subs,
-                        secs: level_t0.elapsed().as_secs_f64(),
+                        secs: level_secs,
                     });
                 }
             }
@@ -193,16 +217,23 @@ pub fn pkt_with_support(eg: &EdgeGraph, pool: &Pool, s: Vec<AtomicI32>) -> Truss
         .iter()
         .map(|a| (a.load(Ordering::Relaxed) + 2) as u32)
         .collect();
+    let total_secs = sp_peel.close();
     let stats = PktStats {
         support_secs: 0.0,
         scan_secs: scan_ns.into_inner() as f64 * 1e-9,
         process_secs: process_ns.into_inner() as f64 * 1e-9,
-        total_secs: t0.elapsed().as_secs_f64(),
+        levels_secs: levels_ns.into_inner() as f64 * 1e-9,
+        total_secs,
         levels: level_count.into_inner() as u32,
         sublevels: sublevel_count.into_inner(),
         per_level: per_level.into_inner().unwrap(),
     };
     TrussResult { trussness, stats }
+}
+
+#[inline]
+fn secs_to_ns(secs: f64) -> u64 {
+    (secs * 1e9) as u64
 }
 
 /// Process one frontier edge `e1 = <u, v>` (Alg. 5 body): enumerate the
@@ -409,6 +440,11 @@ mod tests {
         assert!(res.stats.support_secs > 0.0);
         assert!(res.stats.total_secs >= res.stats.support_secs);
         assert!(res.stats.levels > 0);
+        assert!(res.stats.levels_secs > 0.0, "level spans recorded");
+        assert!(
+            res.stats.levels_secs <= res.stats.total_secs,
+            "levels nest inside the peel span"
+        );
         assert!(res.stats.sublevels >= res.stats.levels as u64 - 1);
         let peeled: u64 = res.stats.per_level.iter().map(|l| l.edges).sum();
         assert_eq!(peeled, eg.m() as u64, "every edge peeled exactly once");

@@ -1,0 +1,168 @@
+//! Integration tests for the observability subsystem: server METRICS /
+//! STATUS round-trips, trace-sink capture vs `PktStats`, and the
+//! span-duration accounting property.
+//!
+//! The trace sink and the metrics registry are process-global, so every
+//! test in this binary serializes on one lock: a PKT run from a
+//! concurrent test would otherwise leak `pkt.*` events into a trace
+//! capture under inspection.
+
+use std::sync::Mutex;
+
+use trussx::coordinator::{serve, Client};
+use trussx::gen;
+use trussx::graph::EdgeGraph;
+use trussx::obs::{report, sink};
+use trussx::par::Pool;
+use trussx::truss;
+
+static OBS_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// Value of the first sample whose line starts with `prefix`, or 0 if
+/// the metric has not been registered yet.
+fn sample(body: &str, prefix: &str) -> f64 {
+    body.lines()
+        .find(|l| l.starts_with(prefix))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.0)
+}
+
+#[test]
+fn server_metrics_and_status_roundtrip() {
+    let _guard = OBS_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let h = serve("127.0.0.1:0").unwrap();
+    let mut c = Client::connect(h.addr).unwrap();
+
+    // baseline (the registry is process-global, so earlier tests may
+    // have counted requests already — assert monotone deltas)
+    let before = c.metrics().unwrap();
+    let d0 = sample(&before, "server_requests_total{verb=\"DECOMP\"}");
+    let h0 = sample(&before, "server_requests_total{verb=\"HIST\"}");
+
+    let r = c.request("DECOMP er:n=60,p=0.15,seed=1 threads=2").unwrap();
+    assert!(r.starts_with("OK "), "{r}");
+    let r = c.request("HIST er:n=60,p=0.15,seed=2").unwrap();
+    assert!(r.starts_with("OK "), "{r}");
+
+    let body = c.metrics().unwrap();
+    assert!(body.contains("# TYPE server_requests_total counter"), "{body}");
+    assert!(body.contains("# TYPE server_request_seconds histogram"), "{body}");
+    let d1 = sample(&body, "server_requests_total{verb=\"DECOMP\"}");
+    let h1 = sample(&body, "server_requests_total{verb=\"HIST\"}");
+    assert!(d1 >= d0 + 1.0, "DECOMP count {d0} -> {d1}");
+    assert!(h1 >= h0 + 1.0, "HIST count {h0} -> {h1}");
+    // the jobs ran PKT, so the phase histograms must be present
+    assert!(body.contains("phase_seconds_bucket{phase=\"pkt.peel\""), "{body}");
+    assert!(body.contains("phase_seconds_bucket{phase=\"pkt.support\""), "{body}");
+    assert!(
+        sample(&body, "server_request_seconds_count{verb=\"DECOMP\"}") >= 1.0,
+        "{body}"
+    );
+
+    // counters keep incrementing across further requests
+    let r = c.request("DECOMP complete:n=6").unwrap();
+    assert!(r.starts_with("OK "), "{r}");
+    let after = c.metrics().unwrap();
+    let d2 = sample(&after, "server_requests_total{verb=\"DECOMP\"}");
+    assert!(d2 >= d1 + 1.0, "DECOMP count {d1} -> {d2}");
+
+    // enriched STATUS: this server ran exactly 3 jobs, none in flight
+    let status = c.request("STATUS").unwrap();
+    assert!(status.starts_with("OK jobs=3 "), "{status}");
+    assert!(status.contains("inflight=0"), "{status}");
+    let uptime: f64 = status
+        .split_whitespace()
+        .find_map(|f| f.strip_prefix("uptime_secs="))
+        .unwrap_or_else(|| panic!("no uptime in {status}"))
+        .parse()
+        .unwrap();
+    assert!(uptime >= 0.0);
+    h.shutdown();
+}
+
+#[test]
+fn trace_matches_pkt_stats_within_one_percent() {
+    let _guard = OBS_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let path = std::env::temp_dir().join("trussx_obs_acceptance.jsonl");
+    let path = path.to_str().unwrap().to_string();
+    sink::set_path(&path).unwrap();
+
+    let g = gen::planted_partition(6, 20, 0.7, 0.02, 42);
+    let eg = EdgeGraph::new(g);
+    let pool = Pool::new(1);
+    let res = truss::pkt(&eg, &pool);
+    sink::disable(); // flushes
+
+    let events = report::read_trace(&path).unwrap();
+    let sum_us = |name: &str| -> f64 {
+        events.iter().filter(|e| e.name == name).map(|e| e.dur_us).sum()
+    };
+    assert_eq!(events.iter().filter(|e| e.name == "pkt.support").count(), 1);
+    assert_eq!(events.iter().filter(|e| e.name == "pkt.peel").count(), 1);
+    assert_eq!(
+        events.iter().filter(|e| e.name == "pkt.level").count() as u32,
+        res.stats.levels,
+        "one pkt.level event per peeling level"
+    );
+
+    // acceptance: trace-derived total within 1% of PktStats.total_secs
+    let trace_total = (sum_us("pkt.support") + sum_us("pkt.peel")) * 1e-6;
+    let diff = (trace_total - res.stats.total_secs).abs();
+    assert!(
+        diff <= res.stats.total_secs * 0.01,
+        "trace total {trace_total}s vs stats total {}s",
+        res.stats.total_secs
+    );
+
+    // `pallas report` renders the same totals from the capture
+    let rendered = report::render_trace_report(&path).unwrap();
+    assert!(rendered.contains("phase summary"), "{rendered}");
+    assert!(rendered.contains("pkt levels"), "{rendered}");
+    let report_total: f64 = rendered
+        .lines()
+        .find(|l| l.starts_with("totals:"))
+        .and_then(|l| l.split_whitespace().find_map(|f| f.strip_prefix("total=")))
+        .and_then(|v| v.strip_suffix('s'))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("no totals line in {rendered}"));
+    let diff = (report_total - res.stats.total_secs).abs();
+    assert!(
+        diff <= res.stats.total_secs * 0.01,
+        "report total {report_total}s vs stats total {}s",
+        res.stats.total_secs
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn span_phase_durations_account_for_total() {
+    let _guard = OBS_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // forall generated graphs: the span-derived phase times nest
+    // consistently — per-level spans tile the peel, scan+process fit
+    // inside the levels, and support+levels accounts for the total.
+    let cases = vec![
+        gen::planted_partition(5, 18, 0.65, 0.03, 1),
+        gen::planted_partition(3, 30, 0.5, 0.05, 2),
+        gen::erdos_renyi(150, 0.08, 3),
+        gen::barabasi_albert(200, 6, 4),
+        gen::complete(24),
+    ];
+    for (i, g) in cases.into_iter().enumerate() {
+        let eg = EdgeGraph::new(g);
+        let pool = Pool::new(2);
+        let st = truss::pkt(&eg, &pool).stats;
+        let eps = 1e-3;
+        assert!(st.support_secs > 0.0, "case {i}: {st:?}");
+        assert!(st.total_secs >= st.support_secs, "case {i}: {st:?}");
+        // scan and process spans are nested inside level spans
+        assert!(st.scan_secs + st.process_secs <= st.levels_secs + eps, "case {i}: {st:?}");
+        // nonzero levels are a subset of all levels
+        let per_level_sum: f64 = st.per_level.iter().map(|l| l.secs).sum();
+        assert!(per_level_sum <= st.levels_secs + eps, "case {i}: {st:?}");
+        // support + levels ≈ total (level spans tile the peel loop)
+        let accounted = st.support_secs + st.levels_secs;
+        assert!(accounted <= st.total_secs * 1.05 + eps, "case {i}: {st:?}");
+        assert!(accounted >= st.total_secs * 0.5 - eps, "case {i}: {st:?}");
+    }
+}
