@@ -4,11 +4,13 @@
 mod tables;
 mod figures;
 mod ablate;
+mod pkt;
 
 pub use ablate::bench_ablate;
 #[cfg(feature = "xla")]
 pub use ablate::bench_xla;
 pub use figures::{bench_fig4, bench_fig5, bench_fig6};
+pub use pkt::{bench_pkt, smoke};
 pub use tables::{bench_table1, bench_table2, bench_table3, bench_table4};
 
 use anyhow::{bail, Result};
@@ -25,19 +27,20 @@ pub fn run(id: &str, scale: usize, threads: usize) -> Result<String> {
         "fig5" => Ok(bench_fig5(scale, threads)),
         "fig6" => Ok(bench_fig6(scale, threads)),
         "ablate" => Ok(bench_ablate(scale, threads)),
+        "pkt" => bench_pkt(scale, threads),
         #[cfg(feature = "xla")]
         "xla" => bench_xla(),
         #[cfg(not(feature = "xla"))]
         "xla" => bail!("bench 'xla' requires a build with `--features xla`"),
-        _ => bail!("unknown bench id '{id}' (table1-4, fig4-6, ablate, xla)"),
+        _ => bail!("unknown bench id '{id}' (table1-4, fig4-6, ablate, pkt, xla)"),
     }
 }
 
 /// All experiment ids in run order (`xla` only when that feature is on).
 #[cfg(feature = "xla")]
-pub const ALL: [&str; 9] = [
-    "table1", "table2", "table3", "table4", "fig4", "fig5", "fig6", "ablate", "xla",
+pub const ALL: [&str; 10] = [
+    "table1", "table2", "table3", "table4", "fig4", "fig5", "fig6", "ablate", "pkt", "xla",
 ];
 #[cfg(not(feature = "xla"))]
-pub const ALL: [&str; 8] =
-    ["table1", "table2", "table3", "table4", "fig4", "fig5", "fig6", "ablate"];
+pub const ALL: [&str; 9] =
+    ["table1", "table2", "table3", "table4", "fig4", "fig5", "fig6", "ablate", "pkt"];

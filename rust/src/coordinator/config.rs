@@ -183,6 +183,9 @@ pub struct JobConfig {
     pub ordering: Ordering,
     pub algorithm: Algorithm,
     pub threads: usize,
+    /// PKT peel tuning (compaction threshold, packed flags); ignored by
+    /// the other algorithms.
+    pub pkt: crate::truss::PktConfig,
 }
 
 impl JobConfig {
@@ -192,6 +195,7 @@ impl JobConfig {
             ordering: Ordering::KCore,
             algorithm: Algorithm::Pkt,
             threads: crate::par::Pool::default_threads(),
+            pkt: crate::truss::PktConfig::default(),
         }
     }
 
@@ -207,6 +211,11 @@ impl JobConfig {
 
     pub fn threads(mut self, t: usize) -> Self {
         self.threads = t.max(1);
+        self
+    }
+
+    pub fn pkt(mut self, p: crate::truss::PktConfig) -> Self {
+        self.pkt = p;
         self
     }
 }

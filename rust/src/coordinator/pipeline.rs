@@ -68,7 +68,7 @@ pub fn run_job(cfg: &JobConfig) -> Result<JobReport> {
     let pool = Pool::new(cfg.threads);
     let t_dec = Timer::start();
     let result = match cfg.algorithm {
-        Algorithm::Pkt => truss::pkt(&eg, &pool),
+        Algorithm::Pkt => truss::pkt_config(&eg, &pool, &cfg.pkt),
         Algorithm::Wc => truss::wc(&eg),
         Algorithm::Ros => truss::ros(&eg, &pool),
         Algorithm::Local => truss::local(&eg, &pool, 100_000),

@@ -6,6 +6,7 @@
 //!
 //! ```text
 //! DECOMP <graphspec> [algo=pkt|wc|ros|local] [threads=N] [order=nat|deg|kco]
+//!                    [compact=0.3] [bitsets=true]     (pkt peel tuning)
 //! HIST    <graphspec> [...same options]   → trussness histogram
 //! STATUS                                  → jobs, in-flight, uptime, threads
 //! METRICS                                 → OK lines=<N> + N exposition lines
@@ -209,6 +210,10 @@ fn parse_job<'a>(spec_str: &str, opts: impl Iterator<Item = &'a str>) -> Result<
                 cfg.ordering =
                     VOrdering::parse(v).with_context(|| format!("bad order '{v}'"))?
             }
+            "compact" => {
+                cfg.pkt.compact_threshold = v.parse().context("bad compact threshold")?
+            }
+            "bitsets" => cfg.pkt.use_bitsets = v.parse().context("bad bitsets flag")?,
             _ => return Err(anyhow!("unknown option '{k}'")),
         }
     }
@@ -270,6 +275,11 @@ mod tests {
         let r = c.request("DECOMP complete:n=6 algo=pkt threads=2").unwrap();
         assert!(r.starts_with("OK "), "{r}");
         assert!(r.contains("tmax=6"), "{r}");
+        // pkt peel tuning options
+        let r = c
+            .request("DECOMP complete:n=6 algo=pkt compact=1.0 bitsets=false")
+            .unwrap();
+        assert!(r.contains("tmax=6"), "{r}");
         let r = c.request("STATUS").unwrap();
         assert!(r.contains("jobs=1"), "{r}");
         h.shutdown();
@@ -292,6 +302,8 @@ mod tests {
         assert!(c.request("DECOMP").unwrap().starts_with("ERR"));
         assert!(c.request("DECOMP er:n=10,p=0.1 algo=zzz").unwrap().starts_with("ERR"));
         assert!(c.request("DECOMP er:n=10,p=0.1 bogus").unwrap().starts_with("ERR"));
+        assert!(c.request("DECOMP er:n=10,p=0.1 compact=x").unwrap().starts_with("ERR"));
+        assert!(c.request("DECOMP er:n=10,p=0.1 bitsets=2").unwrap().starts_with("ERR"));
         // server still alive after errors
         assert!(c.request("STATUS").unwrap().starts_with("OK"));
         h.shutdown();

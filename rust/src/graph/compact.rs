@@ -1,0 +1,208 @@
+//! Active-graph compaction: rebuild a relabeled sub-[`EdgeGraph`] on the
+//! surviving edges of a partially peeled graph.
+//!
+//! The peel re-scans all `m` edges per level and enumerates triangles
+//! through adjacency lists that still contain long-dead edges; once the
+//! live fraction is small that is almost pure wasted bandwidth. Wang &
+//! Cheng (1205.6693) scale truss decomposition past memory limits by
+//! iteratively shrinking the graph, and Jakkula & Karypis (1908.10550)
+//! re-decompose over a compacted edge set; this module is that idea for
+//! the shared-memory peel.
+//!
+//! Key invariant exploited here: [`EdgeGraph::new`] assigns edge ids in
+//! lexicographic `(u, v)` order of the canonical edges. Surviving old
+//! ids taken in ascending order therefore *are* the lexicographic order
+//! a rebuild would assign, so `old_of_new` is simply the sorted survivor
+//! list and the peel's lower-edge-id triangle-ownership rule stays
+//! consistent across the relabeling. Vertices are not renumbered (the
+//! peel's per-thread marking arrays and `el` endpoints stay valid).
+
+use super::{EdgeGraph, EdgeId, Graph, Vertex};
+use crate::par::Pool;
+use std::sync::Mutex;
+
+/// A compacted sub-graph plus the old↔new edge-id mapping.
+pub struct EdgeCompaction {
+    /// The relabeled sub-graph on the surviving edges (same vertex set).
+    pub eg: EdgeGraph,
+    /// `old_of_new[new] = old`: strictly increasing, so the inverse map
+    /// is a binary search.
+    pub old_of_new: Vec<EdgeId>,
+}
+
+impl EdgeCompaction {
+    /// Old id of a compacted edge.
+    #[inline]
+    pub fn old_id(&self, new: EdgeId) -> EdgeId {
+        self.old_of_new[new as usize]
+    }
+
+    /// New id of a surviving old edge, `None` if it was dropped.
+    pub fn new_id(&self, old: EdgeId) -> Option<EdgeId> {
+        self.old_of_new.binary_search(&old).ok().map(|i| i as EdgeId)
+    }
+}
+
+/// Build the sub-[`EdgeGraph`] on the edges where `alive` holds.
+///
+/// The survivor gather is parallel (contiguous static slabs per thread,
+/// concatenated in tid order so old ids stay ascending); the CSR fill is
+/// a serial O(m') pass over the survivors, which the caller only pays
+/// when `m'` is already a small fraction of `m`. The fill needs no row
+/// sorting: survivors are processed in lexicographic `(u, v)` order, so
+/// each row receives its lower neighbors in ascending order first, then
+/// its upper neighbors in ascending order.
+pub fn compact_edges<F>(eg: &EdgeGraph, pool: &Pool, alive: F) -> EdgeCompaction
+where
+    F: Fn(EdgeId) -> bool + Sync,
+{
+    let n = eg.n();
+    let m = eg.m();
+
+    let t = pool.nthreads();
+    let parts: Vec<Mutex<Vec<EdgeId>>> = (0..t).map(|_| Mutex::new(Vec::new())).collect();
+    pool.region(|ctx| {
+        let (lo, hi) = ctx.static_range(m);
+        let mut local = Vec::new();
+        for e in lo..hi {
+            if alive(e as EdgeId) {
+                local.push(e as EdgeId);
+            }
+        }
+        *parts[ctx.tid].lock().unwrap() = local;
+    });
+    let mut old_of_new: Vec<EdgeId> = Vec::new();
+    for p in &parts {
+        old_of_new.append(&mut p.lock().unwrap());
+    }
+    debug_assert!(old_of_new.windows(2).all(|w| w[0] < w[1]));
+
+    let new_m = old_of_new.len();
+    // per-vertex degree and lower-neighbor counts in the sub-graph
+    let mut deg = vec![0usize; n];
+    let mut lower = vec![0usize; n];
+    for &o in &old_of_new {
+        let (u, v) = eg.el[o as usize];
+        deg[u as usize] += 1;
+        deg[v as usize] += 1;
+        lower[v as usize] += 1;
+    }
+    let mut xadj = vec![0usize; n + 1];
+    for u in 0..n {
+        xadj[u + 1] = xadj[u] + deg[u];
+    }
+    // row u: [xadj[u], eo[u]) holds neighbors < u, [eo[u], xadj[u+1])
+    // holds neighbors > u — the same split EdgeGraph::new derives
+    let eo: Vec<usize> = (0..n).map(|u| xadj[u] + lower[u]).collect();
+    let mut cur_lo: Vec<usize> = xadj[..n].to_vec();
+    let mut cur_hi = eo.clone();
+    let mut adj = vec![0 as Vertex; 2 * new_m];
+    let mut eid = vec![0 as EdgeId; 2 * new_m];
+    let mut el = Vec::with_capacity(new_m);
+    for (new, &o) in old_of_new.iter().enumerate() {
+        let (u, v) = eg.el[o as usize];
+        el.push((u, v));
+        adj[cur_hi[u as usize]] = v;
+        eid[cur_hi[u as usize]] = new as EdgeId;
+        cur_hi[u as usize] += 1;
+        adj[cur_lo[v as usize]] = u;
+        eid[cur_lo[v as usize]] = new as EdgeId;
+        cur_lo[v as usize] += 1;
+    }
+    debug_assert!(el.windows(2).all(|w| w[0] < w[1]), "survivors must stay lex-ordered");
+
+    let g = Graph::from_csr(xadj, adj);
+    EdgeCompaction { eg: EdgeGraph { g, eid, eo, el }, old_of_new }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::graph::GraphBuilder;
+    use crate::util::forall;
+
+    /// Reference: rebuild from scratch through the constructors.
+    fn rebuild_reference(eg: &EdgeGraph, keep: &[EdgeId]) -> EdgeGraph {
+        let edges: Vec<(Vertex, Vertex)> =
+            keep.iter().map(|&o| eg.el[o as usize]).collect();
+        let g = GraphBuilder::new().num_vertices(eg.n()).edges_vec(edges).build();
+        EdgeGraph::new(g)
+    }
+
+    fn assert_same(a: &EdgeGraph, b: &EdgeGraph) {
+        assert_eq!(a.g.xadj, b.g.xadj);
+        assert_eq!(a.g.adj, b.g.adj);
+        assert_eq!(a.eid, b.eid);
+        assert_eq!(a.eo, b.eo);
+        assert_eq!(a.el, b.el);
+    }
+
+    #[test]
+    fn identity_compaction_reproduces_graph() {
+        let g = gen::planted_partition(3, 10, 0.8, 0.05, 11);
+        let eg = EdgeGraph::new(g);
+        let c = compact_edges(&eg, &Pool::new(3), |_| true);
+        assert_eq!(c.old_of_new, (0..eg.m() as EdgeId).collect::<Vec<_>>());
+        c.eg.validate();
+        assert_same(&c.eg, &eg);
+    }
+
+    #[test]
+    fn subset_mask_small_graph() {
+        // K4 plus a pendant: drop the pendant and one K4 edge
+        let g = GraphBuilder::new()
+            .edges(&[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3), (3, 4)])
+            .build();
+        let eg = EdgeGraph::new(g);
+        let e03 = eg.edge_id(0, 3).unwrap();
+        let e34 = eg.edge_id(3, 4).unwrap();
+        let c = compact_edges(&eg, &Pool::new(2), |e| e != e03 && e != e34);
+        assert_eq!(c.eg.m(), 5);
+        assert_eq!(c.eg.n(), eg.n(), "vertex set is preserved");
+        c.eg.validate();
+        // mapping round-trips and dropped edges resolve to None
+        for new in 0..c.eg.m() as EdgeId {
+            let old = c.old_id(new);
+            assert_eq!(c.new_id(old), Some(new));
+            assert_eq!(c.eg.el[new as usize], eg.el[old as usize]);
+        }
+        assert_eq!(c.new_id(e03), None);
+        assert_eq!(c.new_id(e34), None);
+        assert_same(&c.eg, &rebuild_reference(&eg, &c.old_of_new));
+    }
+
+    #[test]
+    fn empty_and_full_masks() {
+        let eg = EdgeGraph::new(gen::complete(5));
+        let none = compact_edges(&eg, &Pool::new(2), |_| false);
+        assert_eq!(none.eg.m(), 0);
+        assert_eq!(none.eg.n(), 5);
+        none.eg.validate();
+        let empty = EdgeGraph::new(GraphBuilder::new().build());
+        let c = compact_edges(&empty, &Pool::new(2), |_| true);
+        assert_eq!(c.eg.m(), 0);
+        assert_eq!(c.eg.n(), 0);
+    }
+
+    #[test]
+    fn random_masks_match_reference_rebuild() {
+        forall("compact-matches-rebuild", 24, |rng| {
+            let n = rng.range(2, 60);
+            let g = gen::erdos_renyi(n, rng.f64() * 0.4, rng.next_u64());
+            let eg = EdgeGraph::new(g);
+            let threads = rng.range(1, 5);
+            // random mask with varying density
+            let p = rng.f64();
+            let mask: Vec<bool> = (0..eg.m()).map(|_| rng.f64() < p).collect();
+            let c = compact_edges(&eg, &Pool::new(threads), |e| mask[e as usize]);
+            c.eg.validate();
+            assert_eq!(c.eg.m(), mask.iter().filter(|&&b| b).count());
+            assert_same(&c.eg, &rebuild_reference(&eg, &c.old_of_new));
+            for (new, &old) in c.old_of_new.iter().enumerate() {
+                assert!(mask[old as usize]);
+                assert_eq!(c.new_id(old), Some(new as EdgeId));
+            }
+        });
+    }
+}

@@ -2,11 +2,13 @@
 //! from Fig. 2 of the paper, builders, and file I/O.
 
 mod build;
+mod compact;
 mod csr;
 mod edge;
 pub mod io;
 
 pub use build::GraphBuilder;
+pub use compact::{compact_edges, EdgeCompaction};
 pub use csr::Graph;
 pub use edge::EdgeGraph;
 

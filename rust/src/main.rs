@@ -3,8 +3,9 @@
 //! ```text
 //! pallas decompose <graphspec> [--algo pkt|wc|ros|local] [--threads N]
 //!                  [--order nat|deg|kco] [--hist]
+//!                  [--compact-threshold F] [--no-bitsets]
 //! pallas stats <graphspec>
-//! pallas bench <id|all> [--scale S] [--threads N]
+//! pallas bench <id|all> [--scale S] [--threads N] [--smoke]
 //! pallas serve [--addr HOST:PORT]
 //! pallas generate <graphspec> --out FILE[.el|.bin]
 //! pallas report <trace.jsonl>
@@ -114,9 +115,9 @@ fn dispatch(args: &[String]) -> Result<()> {
 fn print_help() {
     println!(
         "pallas — shared-memory graph truss decomposition (PKT)\n\n\
-         USAGE:\n  pallas decompose <graphspec> [--algo pkt|wc|ros|local] [--threads N] [--order nat|deg|kco] [--hist]\n  \
+         USAGE:\n  pallas decompose <graphspec> [--algo pkt|wc|ros|local] [--threads N] [--order nat|deg|kco] [--hist]\n                   [--compact-threshold F] [--no-bitsets]   (pkt peel tuning)\n  \
          pallas stats <graphspec>\n  \
-         pallas bench <table1|table2|table3|table4|fig4|fig5|fig6|ablate|xla|all> [--scale S] [--threads N]\n  \
+         pallas bench <table1|table2|table3|table4|fig4|fig5|fig6|ablate|pkt|xla|all> [--scale S] [--threads N] [--smoke]\n  \
          pallas query <graphspec> --vertex V [--k K]\n  \
          pallas serve [--addr HOST:PORT]\n  \
          pallas generate <graphspec> --out FILE(.el|.bin)\n  \
@@ -138,7 +139,7 @@ fn cmd_report(args: &[String]) -> Result<()> {
 }
 
 fn cmd_decompose(args: &[String]) -> Result<()> {
-    let o = Opts::parse(args, &["hist"])?;
+    let o = Opts::parse(args, &["hist", "no-bitsets"])?;
     let spec_str = o.positional.first().context("missing graph spec")?;
     let mut cfg = JobConfig::new(GraphSpec::parse(spec_str)?);
     if let Some(a) = o.get("algo") {
@@ -150,6 +151,12 @@ fn cmd_decompose(args: &[String]) -> Result<()> {
     if let Some(ord) = o.get("order") {
         cfg.ordering = Ordering::parse(ord).ok_or_else(|| anyhow!("bad --order '{ord}'"))?;
     }
+    if let Some(thr) = o.get("compact-threshold") {
+        cfg.pkt.compact_threshold = thr.parse().context("bad --compact-threshold")?;
+    }
+    if o.has("no-bitsets") {
+        cfg.pkt.use_bitsets = false;
+    }
     let report = run_job(&cfg)?;
     println!("{}", report.summary());
     println!(
@@ -160,6 +167,12 @@ fn cmd_decompose(args: &[String]) -> Result<()> {
         report.stats.levels,
         report.stats.sublevels
     );
+    if report.stats.rebuilds > 0 {
+        println!(
+            "compaction: {} rebuilds, {:.4}s, {} edges scanned",
+            report.stats.rebuilds, report.stats.compact_secs, report.stats.scanned_edges
+        );
+    }
     if o.has("hist") {
         println!("trussness histogram:");
         for (k, &c) in report.histogram.iter().enumerate() {
@@ -194,7 +207,7 @@ fn cmd_stats(args: &[String]) -> Result<()> {
 }
 
 fn cmd_bench(args: &[String]) -> Result<()> {
-    let o = Opts::parse(args, &[])?;
+    let o = Opts::parse(args, &["smoke"])?;
     let id = o.positional.first().map(|s| s.as_str()).unwrap_or("all");
     let scale: usize = o.get("scale").map(|s| s.parse()).transpose()?.unwrap_or(1);
     let threads: usize = o
@@ -202,6 +215,12 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or_else(Pool::default_threads);
+    if o.has("smoke") {
+        // fast release-mode correctness check for CI: errors/panics fail it
+        let report = trussx::bench::smoke(threads)?;
+        println!("{report}");
+        return Ok(());
+    }
     let ids: Vec<&str> = if id == "all" {
         trussx::bench::ALL.to_vec()
     } else {
@@ -220,7 +239,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let handle = serve(addr)?;
     println!("pallas server listening on {}", handle.addr);
     println!(
-        "protocol: DECOMP <spec> [algo=..] [threads=..] [order=..] | HIST <spec> | STATUS | METRICS | QUIT"
+        "protocol: DECOMP <spec> [algo=..] [threads=..] [order=..] [compact=..] [bitsets=..] | HIST <spec> | STATUS | METRICS | QUIT"
     );
     // foreground: block forever (Ctrl-C to stop)
     loop {

@@ -29,7 +29,10 @@ pub mod external;
 
 pub use cohen::cohen_ktruss;
 pub use local::local;
-pub use pkt::{pkt, pkt_with_support, LevelStat, PktStats, TrussResult};
+pub use pkt::{
+    pkt, pkt_config, pkt_with_support, pkt_with_support_config, LevelStat, PktConfig, PktStats,
+    TrussResult,
+};
 pub use query::TrussIndex;
 pub use ros::ros;
 pub use wc::wc;

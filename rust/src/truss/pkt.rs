@@ -10,12 +10,45 @@
 //! both in the frontier is claimed by the thread holding the *lower*
 //! edge id (the paper's ownership rule, Fig. 3), so every triangle is
 //! processed exactly once — the work-efficiency argument of §3.
+//!
+//! Two memory-traffic optimizations layer on top of the paper's
+//! algorithm, both configurable through [`PktConfig`]:
+//!
+//! - **packed flags** (`use_bitsets`): `processed`/`inCurr`/`inNext` are
+//!   [`AtomicBitset`]s (1 bit/edge) instead of byte-wide `AtomicBool`
+//!   arrays — 8× less flag memory and SCAN bandwidth;
+//! - **active-graph compaction** (`compact_threshold`): the peel runs in
+//!   *stages*; when the live fraction drops below the threshold
+//!   (re-checked after every level) the stage ends and the surviving
+//!   edges are rebuilt into a relabeled sub-[`EdgeGraph`]
+//!   ([`crate::graph::compact_edges`]), so SCAN and triangle enumeration
+//!   only touch live adjacency from then on. Because edge ids stay
+//!   lexicographic under compaction, the ownership rule is unaffected.
 
-use crate::graph::{EdgeGraph, EdgeId};
+use crate::graph::{compact_edges, EdgeGraph, EdgeId};
 use crate::obs;
-use crate::par::{AtomicVec, BatchWriter, Counter, Pool, CHUNK_PROCESS};
+use crate::par::{AtomicBitset, AtomicVec, BatchWriter, Counter, Pool, CHUNK_PROCESS};
 use crate::triangle::support_am4;
 use std::sync::atomic::{AtomicBool, AtomicI32, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Tuning knobs for the peel. `Default` enables both optimizations.
+#[derive(Clone, Copy, Debug)]
+pub struct PktConfig {
+    /// Rebuild a compacted sub-graph when `live_edges < threshold * m`
+    /// (of the current stage's graph), re-checked after each level.
+    /// `0.0` disables compaction; `1.0` rebuilds after every level that
+    /// peeled anything. Values are clamped to `[0, 1]`.
+    pub compact_threshold: f64,
+    /// Use bit-packed flag arrays instead of byte-wide `AtomicBool`s.
+    pub use_bitsets: bool,
+}
+
+impl Default for PktConfig {
+    fn default() -> Self {
+        Self { compact_threshold: 0.3, use_bitsets: true }
+    }
+}
 
 /// Per-level timing/size record (drives Fig. 6).
 #[derive(Clone, Debug)]
@@ -33,9 +66,9 @@ pub struct LevelStat {
 /// Phase breakdown and level statistics for one PKT run (Figs. 4–6).
 ///
 /// Every duration here is derived from `obs` spans (`pkt.support`,
-/// `pkt.peel`, `pkt.scan`, `pkt.process`, `pkt.level`), so the struct
-/// always agrees with what the registry histograms and the trace sink
-/// record for the same run.
+/// `pkt.peel`, `pkt.scan`, `pkt.process`, `pkt.level`, `pkt.compact`),
+/// so the struct always agrees with what the registry histograms and the
+/// trace sink record for the same run.
 #[derive(Clone, Debug, Default)]
 pub struct PktStats {
     pub support_secs: f64,
@@ -49,6 +82,13 @@ pub struct PktStats {
     pub levels: u32,
     pub sublevels: u64,
     pub per_level: Vec<LevelStat>,
+    /// Active-graph compaction rebuilds performed during the peel.
+    pub rebuilds: u32,
+    /// Wall time spent inside those rebuilds (`pkt.compact` spans).
+    pub compact_secs: f64,
+    /// Total edges visited by SCAN across all levels — the bandwidth
+    /// proxy that compaction reduces (without it this is `m · levels`).
+    pub scanned_edges: u64,
 }
 
 /// Result of a truss decomposition run.
@@ -59,9 +99,34 @@ pub struct TrussResult {
     pub stats: PktStats,
 }
 
-/// Run PKT: AM4 support computation followed by level-synchronous
-/// parallel peeling.
+/// Cached handles into the global metric registry for the peel's
+/// compaction instrumentation (same pattern as `par::par_obs`).
+struct PktObs {
+    rebuilds: obs::Counter,
+    live_edges: obs::Gauge,
+    scanned: obs::Counter,
+}
+
+fn pkt_obs() -> &'static PktObs {
+    static OBS: OnceLock<PktObs> = OnceLock::new();
+    OBS.get_or_init(|| {
+        let r = obs::global();
+        PktObs {
+            rebuilds: r.counter("pkt_rebuilds_total", &[]),
+            live_edges: r.gauge("pkt_live_edges", &[]),
+            scanned: r.counter("pkt_scanned_edges_total", &[]),
+        }
+    })
+}
+
+/// Run PKT with the default configuration: AM4 support computation
+/// followed by level-synchronous parallel peeling.
 pub fn pkt(eg: &EdgeGraph, pool: &Pool) -> TrussResult {
+    pkt_config(eg, pool, &PktConfig::default())
+}
+
+/// Run PKT with an explicit [`PktConfig`].
+pub fn pkt_config(eg: &EdgeGraph, pool: &Pool, cfg: &PktConfig) -> TrussResult {
     let sp = obs::span("pkt.support");
     let s_u32 = support_am4(eg, pool);
     let support_secs = sp.close();
@@ -69,7 +134,7 @@ pub fn pkt(eg: &EdgeGraph, pool: &Pool) -> TrussResult {
         .into_iter()
         .map(|a| AtomicI32::new(a.into_inner() as i32))
         .collect();
-    let mut res = pkt_with_support(eg, pool, s);
+    let mut res = pkt_with_support_config(eg, pool, s, cfg);
     res.stats.support_secs = support_secs;
     res.stats.total_secs += support_secs;
     res
@@ -79,33 +144,220 @@ pub fn pkt(eg: &EdgeGraph, pool: &Pool) -> TrussResult {
 /// Exposed separately so benches can ablate the support method (AM4 vs
 /// Ros) inside the same peel.
 pub fn pkt_with_support(eg: &EdgeGraph, pool: &Pool, s: Vec<AtomicI32>) -> TrussResult {
+    pkt_with_support_config(eg, pool, s, &PktConfig::default())
+}
+
+/// The peeling phase with an explicit [`PktConfig`].
+pub fn pkt_with_support_config(
+    eg: &EdgeGraph,
+    pool: &Pool,
+    s: Vec<AtomicI32>,
+    cfg: &PktConfig,
+) -> TrussResult {
+    let sp_peel = obs::span("pkt.peel");
+    let threshold = cfg.compact_threshold.clamp(0.0, 1.0);
+    let (trussness, mut stats) = if cfg.use_bitsets {
+        peel_driver::<AtomicBitset>(eg, pool, s, threshold)
+    } else {
+        peel_driver::<BoolFlags>(eg, pool, s, threshold)
+    };
+    stats.total_secs = sp_peel.close();
+    TrussResult { trussness, stats }
+}
+
+/// The peel's flag-array abstraction: bit-packed or byte-wide, selected
+/// by `PktConfig::use_bitsets` and monomorphized into the stage loop so
+/// the hot path carries no dynamic dispatch. Relaxed ordering throughout
+/// — cross-phase visibility comes from the region barriers.
+trait FlagArray: Sync {
+    fn with_len(len: usize) -> Self;
+    fn get(&self, i: usize) -> bool;
+    fn set(&self, i: usize);
+    fn clear(&self, i: usize);
+}
+
+impl FlagArray for AtomicBitset {
+    fn with_len(len: usize) -> Self {
+        AtomicBitset::new(len)
+    }
+    #[inline]
+    fn get(&self, i: usize) -> bool {
+        AtomicBitset::get(self, i)
+    }
+    #[inline]
+    fn set(&self, i: usize) {
+        AtomicBitset::set(self, i)
+    }
+    #[inline]
+    fn clear(&self, i: usize) {
+        AtomicBitset::clear(self, i)
+    }
+}
+
+/// The pre-compaction representation: one byte per flag.
+struct BoolFlags(Vec<AtomicBool>);
+
+impl FlagArray for BoolFlags {
+    fn with_len(len: usize) -> Self {
+        Self((0..len).map(|_| AtomicBool::new(false)).collect())
+    }
+    #[inline]
+    fn get(&self, i: usize) -> bool {
+        self.0[i].load(Ordering::Relaxed)
+    }
+    #[inline]
+    fn set(&self, i: usize) {
+        self.0[i].store(true, Ordering::Relaxed);
+    }
+    #[inline]
+    fn clear(&self, i: usize) {
+        self.0[i].store(false, Ordering::Relaxed);
+    }
+}
+
+/// Stat accumulators shared across stages (tid-0 fed, barrier-separated
+/// — same discipline as the single-region peel had).
+struct PeelShared {
+    todo: AtomicI64,
+    scan_ns: AtomicU64,
+    process_ns: AtomicU64,
+    levels_ns: AtomicU64,
+    sublevel_count: AtomicU64,
+    level_count: AtomicU64,
+    scanned_edges: AtomicU64,
+    per_level: Mutex<Vec<LevelStat>>,
+}
+
+/// The staged peel. Each stage is one parallel region over the current
+/// (possibly compacted) graph; between stages, the main thread rebuilds
+/// the active sub-graph and remaps the support array. Trussness is
+/// accumulated in the *original* edge-id space through `cur_to_orig`.
+fn peel_driver<F: FlagArray>(
+    eg: &EdgeGraph,
+    pool: &Pool,
+    s: Vec<AtomicI32>,
+    threshold: f64,
+) -> (Vec<u32>, PktStats) {
+    let m_orig = eg.m();
+    let shared = PeelShared {
+        todo: AtomicI64::new(m_orig as i64),
+        scan_ns: AtomicU64::new(0),
+        process_ns: AtomicU64::new(0),
+        levels_ns: AtomicU64::new(0),
+        sublevel_count: AtomicU64::new(0),
+        level_count: AtomicU64::new(0),
+        scanned_edges: AtomicU64::new(0),
+        per_level: Mutex::new(Vec::new()),
+    };
+
+    // final support per ORIGINAL edge id; stages write their peeled
+    // edges here as they finish
+    let mut final_s: Vec<i32> = vec![0; m_orig];
+    // current-stage id → original id; `None` means identity (no rebuild
+    // has happened yet)
+    let mut cur_to_orig: Option<Vec<EdgeId>> = None;
+    let mut owned: Option<EdgeGraph> = None;
+    let mut s = s;
+    let mut rebuilds = 0u32;
+    let mut compact_secs = 0.0f64;
+
+    loop {
+        let cur: &EdgeGraph = owned.as_ref().unwrap_or(eg);
+        let m = cur.m();
+        // levels are numbered globally: the next stage resumes where the
+        // previous one stopped
+        let start_level = shared.level_count.load(Ordering::Relaxed) as i32;
+        let processed = F::with_len(m);
+        let in_a = F::with_len(m);
+        let in_b = F::with_len(m);
+        run_stage(cur, pool, &s, &processed, &in_a, &in_b, &shared, threshold, start_level);
+
+        if shared.todo.load(Ordering::Acquire) <= 0 {
+            // everything in the current graph is peeled; supports are
+            // frozen at the peel level of each edge
+            for e in 0..m {
+                let orig = match &cur_to_orig {
+                    None => e,
+                    Some(map) => map[e] as usize,
+                };
+                final_s[orig] = s[e].load(Ordering::Relaxed);
+            }
+            break;
+        }
+
+        // live fraction dropped below the threshold: record the peeled
+        // edges of this stage, then rebuild on the survivors
+        let sp = obs::span("pkt.compact");
+        for e in 0..m {
+            if processed.get(e) {
+                let orig = match &cur_to_orig {
+                    None => e,
+                    Some(map) => map[e] as usize,
+                };
+                final_s[orig] = s[e].load(Ordering::Relaxed);
+            }
+        }
+        let comp = compact_edges(cur, pool, |e| !processed.get(e as usize));
+        s = comp
+            .old_of_new
+            .iter()
+            .map(|&o| AtomicI32::new(s[o as usize].load(Ordering::Relaxed)))
+            .collect();
+        cur_to_orig = Some(match cur_to_orig {
+            None => comp.old_of_new.clone(),
+            Some(map) => comp.old_of_new.iter().map(|&o| map[o as usize]).collect(),
+        });
+        owned = Some(comp.eg);
+        rebuilds += 1;
+        compact_secs += sp.close();
+        pkt_obs().rebuilds.inc();
+    }
+
+    let trussness: Vec<u32> = final_s.iter().map(|&v| (v + 2) as u32).collect();
+    let stats = PktStats {
+        support_secs: 0.0,
+        scan_secs: shared.scan_ns.into_inner() as f64 * 1e-9,
+        process_secs: shared.process_ns.into_inner() as f64 * 1e-9,
+        levels_secs: shared.levels_ns.into_inner() as f64 * 1e-9,
+        total_secs: 0.0, // filled by the caller from the pkt.peel span
+        levels: shared.level_count.into_inner() as u32,
+        sublevels: shared.sublevel_count.into_inner(),
+        per_level: shared.per_level.into_inner().unwrap(),
+        rebuilds,
+        compact_secs,
+        scanned_edges: shared.scanned_edges.into_inner(),
+    };
+    (trussness, stats)
+}
+
+/// One peel stage: a parallel region running levels on the current graph
+/// until all edges are done (`todo == 0`) or tid 0 requests a compaction
+/// rebuild (live fraction below threshold at a level boundary).
+#[allow(clippy::too_many_arguments)]
+fn run_stage<F: FlagArray>(
+    eg: &EdgeGraph,
+    pool: &Pool,
+    s: &[AtomicI32],
+    processed: &F,
+    in_a: &F,
+    in_b: &F,
+    shared: &PeelShared,
+    threshold: f64,
+    start_level: i32,
+) {
     let n = eg.n();
     let m = eg.m();
     let g = &eg.g;
-    let sp_peel = obs::span("pkt.peel");
-
-    let processed: Vec<AtomicBool> = (0..m).map(|_| AtomicBool::new(false)).collect();
-    // membership flags for the two flip-flopped frontiers
-    let in_a: Vec<AtomicBool> = (0..m).map(|_| AtomicBool::new(false)).collect();
-    let in_b: Vec<AtomicBool> = (0..m).map(|_| AtomicBool::new(false)).collect();
     let front_a: AtomicVec<EdgeId> = AtomicVec::with_capacity(m);
     let front_b: AtomicVec<EdgeId> = AtomicVec::with_capacity(m);
-
-    let todo = AtomicI64::new(m as i64);
     let proc_counter = Counter::new();
-    // phase accumulators (nanoseconds), fed from tid-0 spans between
-    // barriers; the same spans drive the registry histograms and trace
-    let scan_ns = AtomicU64::new(0);
-    let process_ns = AtomicU64::new(0);
-    let levels_ns = AtomicU64::new(0);
-    let sublevel_count = AtomicU64::new(0);
-    let level_count = AtomicU64::new(0);
-    let per_level = std::sync::Mutex::new(Vec::<LevelStat>::new());
+    let want_compact = AtomicBool::new(false);
+    let metrics = pkt_obs();
 
     pool.region(|ctx| {
         let mut x = vec![0u32; n]; // thread-local marking array (u32 slots: cache-friendlier)
-        let mut level: i32 = 0;
-        while todo.load(Ordering::Acquire) > 0 {
+        let mut level: i32 = start_level;
+        while shared.todo.load(Ordering::Acquire) > 0 {
             let mut sp_level: Option<obs::Span> = None;
             let mut sp_scan: Option<obs::Span> = None;
             if ctx.tid == 0 {
@@ -118,17 +370,15 @@ pub fn pkt_with_support(eg: &EdgeGraph, pool: &Pool, s: Vec<AtomicI32>) -> Truss
                 let mut w = BatchWriter::new(&front_a);
                 let (lo, hi) = ctx.static_range(m);
                 for e in lo..hi {
-                    if !processed[e].load(Ordering::Relaxed)
-                        && s[e].load(Ordering::Relaxed) == level
-                    {
-                        in_a[e].store(true, Ordering::Relaxed);
+                    if !processed.get(e) && s[e].load(Ordering::Relaxed) == level {
+                        in_a.set(e);
                         w.push(e as EdgeId);
                     }
                 }
             }
             ctx.barrier();
             if let Some(sp) = sp_scan {
-                scan_ns.fetch_add(secs_to_ns(sp.close()), Ordering::Relaxed);
+                shared.scan_ns.fetch_add(secs_to_ns(sp.close()), Ordering::Relaxed);
             }
 
             // ---- sub-level expansion ----
@@ -137,9 +387,9 @@ pub fn pkt_with_support(eg: &EdgeGraph, pool: &Pool, s: Vec<AtomicI32>) -> Truss
             let mut level_subs = 0u32;
             loop {
                 let (cur, cur_in, nxt, nxt_in) = if !flip {
-                    (&front_a, &in_a, &front_b, &in_b)
+                    (&front_a, in_a, &front_b, in_b)
                 } else {
-                    (&front_b, &in_b, &front_a, &in_a)
+                    (&front_b, in_b, &front_a, in_a)
                 };
                 let cur_len = cur.len();
                 if cur_len == 0 {
@@ -148,8 +398,8 @@ pub fn pkt_with_support(eg: &EdgeGraph, pool: &Pool, s: Vec<AtomicI32>) -> Truss
                 level_edges += cur_len as u64;
                 level_subs += 1;
                 if ctx.tid == 0 {
-                    todo.fetch_sub(cur_len as i64, Ordering::AcqRel);
-                    sublevel_count.fetch_add(1, Ordering::Relaxed);
+                    shared.todo.fetch_sub(cur_len as i64, Ordering::AcqRel);
+                    shared.sublevel_count.fetch_add(1, Ordering::Relaxed);
                 }
                 let sp_proc = if ctx.tid == 0 { Some(obs::span("pkt.process")) } else { None };
                 {
@@ -158,22 +408,21 @@ pub fn pkt_with_support(eg: &EdgeGraph, pool: &Pool, s: Vec<AtomicI32>) -> Truss
                     ctx.for_dynamic(&proc_counter, cur_len, CHUNK_PROCESS, |i| {
                         let e1 = cur_slice[i];
                         process_edge(
-                            eg, g, e1, level, &s, &processed, cur_in, nxt_in, &mut w,
-                            &mut x,
+                            eg, g, e1, level, s, processed, cur_in, nxt_in, &mut w, &mut x,
                         );
                     });
                 }
                 ctx.barrier();
                 if let Some(sp) = sp_proc {
-                    process_ns.fetch_add(secs_to_ns(sp.close()), Ordering::Relaxed);
+                    shared.process_ns.fetch_add(secs_to_ns(sp.close()), Ordering::Relaxed);
                 }
                 // retire the current frontier: mark processed, clear flags
                 {
                     let cur_slice = cur.as_slice();
                     ctx.for_static(cur_len, |i| {
                         let e = cur_slice[i] as usize;
-                        processed[e].store(true, Ordering::Relaxed);
-                        cur_in[e].store(false, Ordering::Relaxed);
+                        processed.set(e);
+                        cur_in.clear(e);
                     });
                 }
                 ctx.barrier();
@@ -189,7 +438,11 @@ pub fn pkt_with_support(eg: &EdgeGraph, pool: &Pool, s: Vec<AtomicI32>) -> Truss
             if ctx.tid == 0 {
                 front_a.clear();
                 front_b.clear();
-                level_count.fetch_add(1, Ordering::Relaxed);
+                shared.level_count.fetch_add(1, Ordering::Relaxed);
+                shared.scanned_edges.fetch_add(m as u64, Ordering::Relaxed);
+                metrics.scanned.add(m as u64);
+                let live = shared.todo.load(Ordering::Acquire).max(0) as u64;
+                metrics.live_edges.set(live as f64);
                 let level_secs = sp_level
                     .take()
                     .map(|mut sp| {
@@ -198,37 +451,33 @@ pub fn pkt_with_support(eg: &EdgeGraph, pool: &Pool, s: Vec<AtomicI32>) -> Truss
                         sp.close()
                     })
                     .unwrap_or(0.0);
-                levels_ns.fetch_add(secs_to_ns(level_secs), Ordering::Relaxed);
+                shared.levels_ns.fetch_add(secs_to_ns(level_secs), Ordering::Relaxed);
                 if level_edges > 0 {
-                    per_level.lock().unwrap().push(LevelStat {
+                    shared.per_level.lock().unwrap().push(LevelStat {
                         level: level as u32,
                         edges: level_edges,
                         sublevels: level_subs,
                         secs: level_secs,
                     });
                 }
+                // compaction check: live must have shrunk (strictly
+                // below m, so empty levels never trigger a rebuild loop)
+                // and still be nonzero
+                if threshold > 0.0
+                    && live > 0
+                    && (live as usize) < m
+                    && (live as f64) < threshold * m as f64
+                {
+                    want_compact.store(true, Ordering::Release);
+                }
             }
             ctx.barrier();
             level += 1;
+            if want_compact.load(Ordering::Acquire) {
+                break;
+            }
         }
     });
-
-    let trussness: Vec<u32> = s
-        .iter()
-        .map(|a| (a.load(Ordering::Relaxed) + 2) as u32)
-        .collect();
-    let total_secs = sp_peel.close();
-    let stats = PktStats {
-        support_secs: 0.0,
-        scan_secs: scan_ns.into_inner() as f64 * 1e-9,
-        process_secs: process_ns.into_inner() as f64 * 1e-9,
-        levels_secs: levels_ns.into_inner() as f64 * 1e-9,
-        total_secs,
-        levels: level_count.into_inner() as u32,
-        sublevels: sublevel_count.into_inner(),
-        per_level: per_level.into_inner().unwrap(),
-    };
-    TrussResult { trussness, stats }
 }
 
 #[inline]
@@ -242,15 +491,15 @@ fn secs_to_ns(secs: f64) -> u64 {
 /// ownership rule.
 #[allow(clippy::too_many_arguments)]
 #[inline]
-fn process_edge(
+fn process_edge<F: FlagArray>(
     eg: &EdgeGraph,
     g: &crate::graph::Graph,
     e1: EdgeId,
     level: i32,
     s: &[AtomicI32],
-    processed: &[AtomicBool],
-    in_curr: &[AtomicBool],
-    in_next: &[AtomicBool],
+    processed: &F,
+    in_curr: &F,
+    in_next: &F,
     w_next: &mut BatchWriter<'_, EdgeId>,
     x: &mut [u32],
 ) {
@@ -279,17 +528,15 @@ fn process_edge(
         }
         let e2 = eg.eid[j]; // <b, w>
         let e3 = eg.eid[alo + xw as usize - 1]; // <a, w>
-        if processed[e2 as usize].load(Ordering::Relaxed)
-            || processed[e3 as usize].load(Ordering::Relaxed)
-        {
+        if processed.get(e2 as usize) || processed.get(e3 as usize) {
             continue; // triangle already destroyed in an earlier sub-level
         }
         // decrement S[e2] unless e3 (also in curr) owns the triangle
-        if !in_curr[e3 as usize].load(Ordering::Relaxed) || e1 < e3 {
+        if !in_curr.get(e3 as usize) || e1 < e3 {
             decrement(e2, level, s, in_next, w_next);
         }
         // decrement S[e3] unless e2 (also in curr) owns the triangle
-        if !in_curr[e2 as usize].load(Ordering::Relaxed) || e1 < e2 {
+        if !in_curr.get(e2 as usize) || e1 < e2 {
             decrement(e3, level, s, in_next, w_next);
         }
     }
@@ -303,11 +550,11 @@ fn process_edge(
 /// overshoot correction (Alg. 5 lines 17–28): the thread that observes
 /// the `level+1 → level` transition appends `e` to the next frontier.
 #[inline]
-fn decrement(
+fn decrement<F: FlagArray>(
     e: EdgeId,
     level: i32,
     s: &[AtomicI32],
-    in_next: &[AtomicBool],
+    in_next: &F,
     w_next: &mut BatchWriter<'_, EdgeId>,
 ) {
     let ei = e as usize;
@@ -315,7 +562,7 @@ fn decrement(
         let old = s[ei].fetch_sub(1, Ordering::AcqRel);
         if old == level + 1 {
             // this thread completed the transition into the current level
-            in_next[ei].store(true, Ordering::Relaxed);
+            in_next.set(ei);
             w_next.push(e);
         }
         if old <= level {
@@ -336,6 +583,9 @@ mod tests {
         pkt(&EdgeGraph::new(g), &Pool::new(threads)).trussness
     }
 
+    /// The unoptimized reference configuration: no compaction, byte flags.
+    const PLAIN: PktConfig = PktConfig { compact_threshold: 0.0, use_bitsets: false };
+
     #[test]
     fn complete_graph_trussness() {
         // every edge of K_n has trussness n
@@ -355,16 +605,12 @@ mod tests {
 
     #[test]
     fn paper_figure1_example() {
-        // Figure 1: 8-vertex graph; all coreness 3, two edges trussness 2,
-        // rest trussness 3, two 3-trusses. Two K4-minus-one-edge blocks
-        // joined by two bridge edges reproduce those properties: use two
-        // "diamond" blocks (K4 minus an edge gives trussness-3 edges? no:
-        // K4\e edges lie in ≤1 triangle each → trussness 3 only for the
-        // middle edge... ). Use instead: two K4s (每 edge trussness 4? K4
-        // edges have 2 triangles → trussness 4)… Figure 1 has trussness-3
-        // edges, i.e. blocks where each edge is in exactly 1 surviving
-        // triangle: triangles sharing nothing. Simplest faithful instance:
-        // two disjoint triangles plus two bridge edges between them.
+        // Figure 1 shape: all vertices have coreness 3-ish structure,
+        // two edges of trussness 2, the rest trussness 3, and two
+        // distinct 3-trusses. Two disjoint triangles joined by two
+        // bridge edges reproduce exactly those properties: each bridge
+        // lies in no triangle (trussness 2) and each triangle is a
+        // maximal 3-truss of its own.
         let g = GraphBuilder::new()
             .edges(&[
                 (0, 1), (1, 2), (0, 2), // triangle A
@@ -446,6 +692,7 @@ mod tests {
             "levels nest inside the peel span"
         );
         assert!(res.stats.sublevels >= res.stats.levels as u64 - 1);
+        assert!(res.stats.scanned_edges >= eg.m() as u64, "at least one full scan");
         let peeled: u64 = res.stats.per_level.iter().map(|l| l.edges).sum();
         assert_eq!(peeled, eg.m() as u64, "every edge peeled exactly once");
         // per-level trussness histogram must match the result
@@ -471,5 +718,80 @@ mod tests {
         let eg = EdgeGraph::new(GraphBuilder::new().build());
         let res = pkt(&eg, &Pool::new(2));
         assert!(res.trussness.is_empty());
+    }
+
+    #[test]
+    fn config_paths_agree_on_known_graph() {
+        // K5 + pendant: every (threshold, flags) combination must match
+        // the plain path, including the degenerate thresholds
+        let mut edges = vec![];
+        for u in 0..5u32 {
+            for v in (u + 1)..5 {
+                edges.push((u, v));
+            }
+        }
+        edges.push((4, 5));
+        let g = GraphBuilder::new().edges_vec(edges).build();
+        let eg = EdgeGraph::new(g);
+        let base = pkt_config(&eg, &Pool::new(1), &PLAIN).trussness;
+        for thr in [0.0, 0.3, 1.0] {
+            for bits in [false, true] {
+                let cfg = PktConfig { compact_threshold: thr, use_bitsets: bits };
+                let r = pkt_config(&eg, &Pool::new(2), &cfg);
+                assert_eq!(r.trussness, base, "thr={thr} bits={bits}");
+                if thr == 0.0 {
+                    assert_eq!(r.stats.rebuilds, 0, "thr=0 must never rebuild");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compaction_rebuilds_and_reduces_scan_work() {
+        // K5 + pendant peels in two waves (tail at level 0, K5 at level
+        // 3), so an aggressive threshold must rebuild at least once and
+        // scan strictly fewer edges than the m·levels baseline
+        let mut edges = vec![];
+        for u in 0..5u32 {
+            for v in (u + 1)..5 {
+                edges.push((u, v));
+            }
+        }
+        edges.push((4, 5));
+        let g = GraphBuilder::new().edges_vec(edges).build();
+        let eg = EdgeGraph::new(g);
+        let plain = pkt_config(&eg, &Pool::new(2), &PLAIN);
+        let compact = pkt_config(
+            &eg,
+            &Pool::new(2),
+            &PktConfig { compact_threshold: 1.0, use_bitsets: true },
+        );
+        assert_eq!(plain.trussness, compact.trussness);
+        assert!(compact.stats.rebuilds >= 1, "{:?}", compact.stats);
+        assert_eq!(plain.stats.rebuilds, 0);
+        assert_eq!(
+            plain.stats.scanned_edges,
+            eg.m() as u64 * plain.stats.levels as u64,
+            "without compaction every level scans all of m"
+        );
+        assert!(
+            compact.stats.scanned_edges < plain.stats.scanned_edges,
+            "compacted scan work {} must be below baseline {}",
+            compact.stats.scanned_edges,
+            plain.stats.scanned_edges
+        );
+        assert_eq!(compact.stats.levels, plain.stats.levels, "same level sequence");
+        assert!(compact.stats.compact_secs > 0.0);
+    }
+
+    #[test]
+    fn extreme_thresholds_are_clamped() {
+        let eg = EdgeGraph::new(gen::planted_partition(2, 8, 0.9, 0.1, 9));
+        let base = pkt_config(&eg, &Pool::new(1), &PLAIN).trussness;
+        for thr in [-1.0, 7.5, f64::NAN] {
+            let cfg = PktConfig { compact_threshold: thr, use_bitsets: true };
+            let r = pkt_config(&eg, &Pool::new(2), &cfg);
+            assert_eq!(r.trussness, base, "thr={thr}");
+        }
     }
 }

@@ -157,6 +157,34 @@ fn prop_definition_soundness() {
 }
 
 #[test]
+fn prop_compaction_agrees() {
+    // the compacted/bitset peel is an optimization, not an algorithm
+    // change: every (threshold, flag-repr, threads) combination must
+    // reproduce the plain peel's trussness edge-for-edge
+    forall("compaction-agrees", 12, |rng| {
+        let g = random_graph(rng);
+        let eg = EdgeGraph::new(g);
+        let plain = truss::PktConfig { compact_threshold: 0.0, use_bitsets: false };
+        let base = truss::pkt_config(&eg, &Pool::new(1), &plain).trussness;
+        for thr in [0.0, 0.3, 1.0] {
+            for bits in [false, true] {
+                let cfg = truss::PktConfig { compact_threshold: thr, use_bitsets: bits };
+                for threads in [1, 3] {
+                    let r = truss::pkt_config(&eg, &Pool::new(threads), &cfg);
+                    assert_eq!(
+                        r.trussness, base,
+                        "thr={thr} bits={bits} threads={threads}"
+                    );
+                    if thr == 0.0 {
+                        assert_eq!(r.stats.rebuilds, 0, "thr=0 must never rebuild");
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_coreness_vs_degree_and_truss_relations() {
     forall("core-deg-truss", 30, |rng| {
         let g = random_graph(rng);
