@@ -13,7 +13,7 @@ use crate::truss;
 use crate::util::fmt_secs;
 #[cfg(feature = "xla")]
 use anyhow::Result;
-use std::sync::atomic::AtomicI32;
+use crate::par::sync::atomic::AtomicI32;
 
 /// Ablations of PKT design choices called out in DESIGN.md:
 /// (a) support computation method inside the peel (oriented AM4 vs

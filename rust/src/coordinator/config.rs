@@ -186,6 +186,10 @@ pub struct JobConfig {
     /// PKT peel tuning (compaction threshold, packed flags); ignored by
     /// the other algorithms.
     pub pkt: crate::truss::PktConfig,
+    /// Run deep structural validation around the decomposition (see
+    /// [`crate::validate`]); also enabled process-wide by
+    /// `TRUSSX_VALIDATE=1`.
+    pub validate: bool,
 }
 
 impl JobConfig {
@@ -196,6 +200,7 @@ impl JobConfig {
             algorithm: Algorithm::Pkt,
             threads: crate::par::Pool::default_threads(),
             pkt: crate::truss::PktConfig::default(),
+            validate: false,
         }
     }
 
@@ -216,6 +221,11 @@ impl JobConfig {
 
     pub fn pkt(mut self, p: crate::truss::PktConfig) -> Self {
         self.pkt = p;
+        self
+    }
+
+    pub fn validate(mut self, v: bool) -> Self {
+        self.validate = v;
         self
     }
 }
@@ -268,5 +278,7 @@ mod tests {
             .threads(2);
         assert_eq!(j.algorithm, Algorithm::Wc);
         assert_eq!(j.threads, 2);
+        assert!(!j.validate, "validation is opt-in");
+        assert!(j.validate(true).validate);
     }
 }

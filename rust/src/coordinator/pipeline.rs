@@ -7,7 +7,8 @@ use crate::metrics::{gweps, Timer};
 use crate::order;
 use crate::par::Pool;
 use crate::truss::{self, PktStats};
-use anyhow::Result;
+use crate::{triangle, validate};
+use anyhow::{bail, Result};
 
 /// Everything a job run produces. Per-edge trussness is kept alongside
 /// the summary so callers (server, examples) can drill in.
@@ -28,6 +29,10 @@ pub struct JobReport {
     pub build_secs: f64,
     pub order_secs: f64,
     pub decompose_secs: f64,
+    /// Wall time spent in the pre/post validation passes (0 when
+    /// validation is off; excludes the peel's in-place compaction checks,
+    /// which land inside `decompose_secs`).
+    pub validate_secs: f64,
     /// Phase breakdown from the decomposition.
     pub stats: PktStats,
     /// Wedges/sec/1e9 over the decomposition time (the paper's rate).
@@ -66,6 +71,26 @@ pub fn run_job(cfg: &JobConfig) -> Result<JobReport> {
     let order_secs = t_order.secs();
 
     let pool = Pool::new(cfg.threads);
+
+    // validation, part 1: structural pre-checks on the inputs the
+    // decomposition trusts. The scoped guard also arms the peel's
+    // in-place compaction checks for the duration of the job.
+    let validating = cfg.validate || validate::enabled();
+    let _vguard = validating.then(validate::enable_scoped);
+    let mut validate_secs = 0.0;
+    if validating {
+        let t_val = Timer::start();
+        let mut rep = validate::Report::new();
+        validate::check_graph(&eg.g, &mut rep);
+        validate::check_edge_graph(&eg, &mut rep);
+        let s = triangle::into_plain(triangle::support_am4(&eg, &pool));
+        validate::check_support(&eg, &s, &mut rep);
+        if let Some(err) = rep.error() {
+            bail!("pre-decomposition validation failed:\n{err}");
+        }
+        validate_secs = t_val.secs();
+    }
+
     let t_dec = Timer::start();
     let result = match cfg.algorithm {
         Algorithm::Pkt => truss::pkt_config(&eg, &pool, &cfg.pkt),
@@ -74,6 +99,17 @@ pub fn run_job(cfg: &JobConfig) -> Result<JobReport> {
         Algorithm::Local => truss::local(&eg, &pool, 100_000),
     };
     let decompose_secs = t_dec.secs();
+
+    // validation, part 2: the output against its analytic bounds
+    if validating {
+        let t_post = Timer::start();
+        let mut rep = validate::Report::new();
+        validate::check_trussness(&eg, &result.trussness, &mut rep);
+        if let Some(err) = rep.error() {
+            bail!("post-decomposition validation failed:\n{err}");
+        }
+        validate_secs += t_post.secs();
+    }
 
     let wedges = eg.g.wedge_count();
     Ok(JobReport {
@@ -90,6 +126,7 @@ pub fn run_job(cfg: &JobConfig) -> Result<JobReport> {
         build_secs,
         order_secs,
         decompose_secs,
+        validate_secs,
         stats: result.stats,
         gweps: gweps(wedges, decompose_secs),
     })
@@ -136,6 +173,19 @@ mod tests {
         }
         assert_eq!(hists[0], hists[1]);
         assert_eq!(hists[0], hists[2]);
+    }
+
+    #[test]
+    fn pipeline_validate_clean_run() {
+        // rmat + default pkt config triggers compaction rebuilds, so the
+        // in-peel check_compaction hook runs too (scoped enable)
+        let spec = GraphSpec::parse("rmat:n=256,m=1500,seed=3").unwrap();
+        let r = run_job(&JobConfig::new(spec).threads(2).validate(true)).unwrap();
+        assert!(r.validate_secs > 0.0, "validation time must be recorded");
+        let base_spec = GraphSpec::parse("rmat:n=256,m=1500,seed=3").unwrap();
+        let base = run_job(&JobConfig::new(base_spec).threads(2)).unwrap();
+        assert_eq!(base.validate_secs, 0.0, "no validation time when off");
+        assert_eq!(r.trussness, base.trussness, "validation must not perturb results");
     }
 
     #[test]

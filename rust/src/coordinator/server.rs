@@ -7,6 +7,7 @@
 //! ```text
 //! DECOMP <graphspec> [algo=pkt|wc|ros|local] [threads=N] [order=nat|deg|kco]
 //!                    [compact=0.3] [bitsets=true]     (pkt peel tuning)
+//!                    [validate=true]    (deep invariant checks, see crate::validate)
 //! HIST    <graphspec> [...same options]   → trussness histogram
 //! STATUS                                  → jobs, in-flight, uptime, threads
 //! METRICS                                 → OK lines=<N> + N exposition lines
@@ -24,7 +25,7 @@ use crate::order::Ordering as VOrdering;
 use anyhow::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::par::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -51,7 +52,11 @@ impl ServerHandle {
 
     /// Stop accepting and join the accept loop.
     pub fn shutdown(mut self) {
-        self.state.stop.store(true, Ordering::SeqCst);
+        // ORDERING: Release pairs with the Acquire load in the accept
+        // loop; the flag is the only state published through this edge,
+        // so SeqCst's total order buys nothing (loom-checked pattern:
+        // par::loom_model::loom_level_boundary_publish).
+        self.state.stop.store(true, Ordering::Release);
         // poke the accept loop awake
         let _ = TcpStream::connect(self.addr);
         if let Some(j) = self.join.take() {
@@ -74,7 +79,9 @@ pub fn serve(addr: &str) -> Result<ServerHandle> {
     let accept_state = state.clone();
     let join = std::thread::spawn(move || {
         for conn in listener.incoming() {
-            if accept_state.stop.load(Ordering::SeqCst) {
+            // ORDERING: Acquire pairs with the Release store in
+            // `ServerHandle::shutdown`.
+            if accept_state.stop.load(Ordering::Acquire) {
                 break;
             }
             let Ok(stream) = conn else { continue };
@@ -214,6 +221,7 @@ fn parse_job<'a>(spec_str: &str, opts: impl Iterator<Item = &'a str>) -> Result<
                 cfg.pkt.compact_threshold = v.parse().context("bad compact threshold")?
             }
             "bitsets" => cfg.pkt.use_bitsets = v.parse().context("bad bitsets flag")?,
+            "validate" => cfg.validate = v.parse().context("bad validate flag")?,
             _ => return Err(anyhow!("unknown option '{k}'")),
         }
     }
@@ -280,6 +288,9 @@ mod tests {
             .request("DECOMP complete:n=6 algo=pkt compact=1.0 bitsets=false")
             .unwrap();
         assert!(r.contains("tmax=6"), "{r}");
+        // deep invariant checks pass on a clean pipeline
+        let r = c.request("DECOMP complete:n=6 validate=true threads=2").unwrap();
+        assert!(r.contains("tmax=6"), "{r}");
         let r = c.request("STATUS").unwrap();
         assert!(r.contains("jobs=1"), "{r}");
         h.shutdown();
@@ -304,6 +315,7 @@ mod tests {
         assert!(c.request("DECOMP er:n=10,p=0.1 bogus").unwrap().starts_with("ERR"));
         assert!(c.request("DECOMP er:n=10,p=0.1 compact=x").unwrap().starts_with("ERR"));
         assert!(c.request("DECOMP er:n=10,p=0.1 bitsets=2").unwrap().starts_with("ERR"));
+        assert!(c.request("DECOMP er:n=10,p=0.1 validate=x").unwrap().starts_with("ERR"));
         // server still alive after errors
         assert!(c.request("STATUS").unwrap().starts_with("OK"));
         h.shutdown();

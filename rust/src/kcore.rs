@@ -11,7 +11,7 @@
 
 use crate::graph::{Graph, Vertex};
 use crate::par::{AtomicVec, BatchWriter, Counter, Pool};
-use std::sync::atomic::{AtomicI64, AtomicU32, Ordering};
+use crate::par::sync::atomic::{AtomicI64, AtomicU32, Ordering};
 
 /// Serial BZ k-core: returns the coreness of every vertex.
 pub fn bz(g: &Graph) -> Vec<u32> {
@@ -177,7 +177,7 @@ pub fn mpm(g: &Graph, pool: &Pool, max_rounds: u32) -> Vec<u32> {
     let rho: Vec<AtomicU32> =
         (0..n).map(|u| AtomicU32::new(g.degree(u as Vertex) as u32)).collect();
     let rho_new: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
-    let changed = std::sync::atomic::AtomicBool::new(true);
+    let changed = crate::par::sync::atomic::AtomicBool::new(true);
     let counter = Counter::new();
     pool.region(|ctx| {
         let mut vals: Vec<u32> = Vec::new();

@@ -22,17 +22,36 @@
 //! RAII phase spans, JSONL trace sink, Prometheus exposition) is wired
 //! through the runtime, the kernels, and the coordinator.
 
+// Under `RUSTFLAGS="--cfg loom"` (see `par::sync`) only the concurrency
+// core and its model tests build: the rest of the crate leans on std
+// facilities loom cannot schedule (OnceLock statics, scoped threads,
+// barriers, TCP, timers), so it is gated out of the model build.
+#[cfg(not(loom))]
 pub mod bench;
+#[cfg(not(loom))]
 pub mod coordinator;
+#[cfg(not(loom))]
 pub mod gen;
+#[cfg(not(loom))]
 pub mod graph;
+#[cfg(not(loom))]
 pub mod kcore;
+#[cfg(not(loom))]
+pub mod lint;
+#[cfg(not(loom))]
 pub mod metrics;
+#[cfg(not(loom))]
 pub mod obs;
+#[cfg(not(loom))]
 pub mod order;
 pub mod par;
-#[cfg(feature = "xla")]
+#[cfg(all(feature = "xla", not(loom)))]
 pub mod runtime;
+#[cfg(not(loom))]
 pub mod triangle;
+#[cfg(not(loom))]
 pub mod truss;
+#[cfg(not(loom))]
 pub mod util;
+#[cfg(not(loom))]
+pub mod validate;

@@ -1,0 +1,441 @@
+//! `pallas lint` — a concurrency-hygiene source lint for this crate.
+//!
+//! Clippy cannot see project conventions, so this pass enforces the ones
+//! the concurrency work relies on (CI runs it via `pallas lint rust/src`):
+//!
+//! 1. **`unsafe-safety`** — every `unsafe` keyword carries a `SAFETY:`
+//!    comment, on the same line or in the contiguous comment/attribute
+//!    block directly above.
+//! 2. **`seqcst-ordering`** — `SeqCst` is banned unless an `ORDERING:`
+//!    comment justifies why a weaker ordering does not suffice.
+//! 3. **`server-unwrap`** — no `.unwrap()` / `.expect(` in the request
+//!    path of `coordinator/server.rs`: a panic there kills a client
+//!    connection thread silently instead of returning an `ERR` line.
+//! 4. **`atomic-import`** — atomics come from `crate::par::sync::atomic`
+//!    (the loom shim), never `std::sync::atomic` directly; code that
+//!    bypasses the shim is invisible to the loom models.
+//!
+//! The scanner is text-level but syntax-aware where it matters: string
+//! literals (including multi-line and raw `r#"…"#` strings), `//` and
+//! nested `/* */` comments, and char-literal-vs-lifetime ambiguity are
+//! resolved before any rule pattern runs, so a pattern inside a string
+//! or comment never fires — which is also what lets this file lint
+//! itself cleanly while naming every pattern it searches for. Test
+//! modules are exempt from all rules: by crate convention they are a
+//! tail `#[cfg(test)]` (or `#[cfg(all(test, …))]`) module, and
+//! everything from that attribute down is skipped.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One rule hit: which rule, where, and why it matters.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LintViolation {
+    /// Rule slug, e.g. `unsafe-safety`.
+    pub rule: &'static str,
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for LintViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Result of linting a tree of files.
+#[derive(Debug, Default)]
+pub struct LintOutcome {
+    pub files_scanned: usize,
+    pub violations: Vec<LintViolation>,
+}
+
+/// Lint every `.rs` file under `root` (a directory or a single file),
+/// in sorted order for stable output.
+pub fn lint_tree(root: &Path) -> Result<LintOutcome> {
+    let mut files = vec![];
+    collect_rs(root, &mut files)
+        .with_context(|| format!("walking {}", root.display()))?;
+    files.sort();
+    let mut out = LintOutcome::default();
+    for f in files {
+        let src = std::fs::read_to_string(&f)
+            .with_context(|| format!("reading {}", f.display()))?;
+        out.files_scanned += 1;
+        out.violations
+            .extend(lint_source(&f.to_string_lossy(), &src));
+    }
+    Ok(out)
+}
+
+fn collect_rs(path: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    if path.is_file() {
+        if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path.to_path_buf());
+        }
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(path)? {
+        collect_rs(&entry?.path(), out)?;
+    }
+    Ok(())
+}
+
+/// Scanner state carried across lines: strings and block comments span
+/// line boundaries.
+#[derive(Clone, Copy)]
+enum Mode {
+    Code,
+    /// Inside `"…"`; `escape` set when the previous char was `\`.
+    Str { escape: bool },
+    /// Inside `r"…"` / `r#"…"#`; closes on `"` followed by `hashes` `#`s.
+    RawStr { hashes: usize },
+    /// Inside `/* … */`, which nests in Rust.
+    Block { depth: usize },
+}
+
+/// Split one line into (code, comment) with string-literal *contents*
+/// dropped from the code part (delimiters kept), returning the state the
+/// next line starts in.
+fn split_line(line: &str, mut mode: Mode) -> (String, String, Mode) {
+    let chars: Vec<char> = line.chars().collect();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        match mode {
+            Mode::Str { escape } => {
+                if escape {
+                    mode = Mode::Str { escape: false };
+                } else if c == '\\' {
+                    mode = Mode::Str { escape: true };
+                } else if c == '"' {
+                    code.push('"');
+                    mode = Mode::Code;
+                }
+                i += 1;
+            }
+            Mode::RawStr { hashes } => {
+                if c == '"' && chars[i + 1..].iter().take(hashes).filter(|&&h| h == '#').count() == hashes
+                {
+                    code.push('"');
+                    mode = Mode::Code;
+                    i += 1 + hashes;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Block { depth } => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    mode = if depth == 1 { Mode::Code } else { Mode::Block { depth: depth - 1 } };
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    mode = Mode::Block { depth: depth + 1 };
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    comment.extend(&chars[i + 2..]);
+                    i = chars.len();
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    mode = Mode::Block { depth: 1 };
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    mode = Mode::Str { escape: false };
+                    i += 1;
+                } else if c == 'r' && raw_string_hashes(&chars, i).is_some() {
+                    let prev_ident = i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_');
+                    match raw_string_hashes(&chars, i) {
+                        Some(h) if !prev_ident => {
+                            code.push('"');
+                            mode = Mode::RawStr { hashes: h };
+                            i += 2 + h; // r, hashes, opening quote
+                        }
+                        _ => {
+                            code.push(c);
+                            i += 1;
+                        }
+                    }
+                } else if c == '\'' {
+                    // char literal vs lifetime: escaped chars end at the
+                    // next quote; a one-char literal closes two ahead;
+                    // anything else is a lifetime tick.
+                    if chars.get(i + 1) == Some(&'\\') {
+                        let close = chars[i + 2..].iter().position(|&x| x == '\'');
+                        i = match close {
+                            Some(k) => i + 2 + k + 1,
+                            None => i + 1,
+                        };
+                    } else if chars.get(i + 2) == Some(&'\'') {
+                        i += 3;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    (code, comment, mode)
+}
+
+/// `Some(hashes)` if `chars[at]` starts a raw string (`r"`, `r#"`, …).
+fn raw_string_hashes(chars: &[char], at: usize) -> Option<usize> {
+    let mut j = at + 1;
+    let mut hashes = 0;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    (chars.get(j) == Some(&'"')).then_some(hashes)
+}
+
+/// Whole-word search (the needle must not be flanked by ident chars).
+fn contains_word(code: &str, word: &str) -> bool {
+    let b = code.as_bytes();
+    let w = word.as_bytes();
+    if w.is_empty() || b.len() < w.len() {
+        return false;
+    }
+    let ident = |c: u8| c.is_ascii_alphanumeric() || c == b'_';
+    b.windows(w.len()).enumerate().any(|(p, win)| {
+        win == w
+            && (p == 0 || !ident(b[p - 1]))
+            && (p + w.len() == b.len() || !ident(b[p + w.len()]))
+    })
+}
+
+/// Lint one file's source. `path` decides the path-scoped rules (the
+/// server unwrap ban, the sync-shim exemption).
+pub fn lint_source(path: &str, src: &str) -> Vec<LintViolation> {
+    let norm = path.replace('\\', "/");
+    let is_sync_shim = norm.ends_with("par/sync.rs");
+    let is_server = norm.ends_with("coordinator/server.rs");
+
+    // (raw trimmed line, code part, comment part) per line
+    let mut mode = Mode::Code;
+    let mut lines: Vec<(String, String, String)> = vec![];
+    for line in src.lines() {
+        let (code, comment, next) = split_line(line, mode);
+        mode = next;
+        lines.push((line.trim().to_string(), code, comment));
+    }
+
+    // everything from the tail test module's cfg attribute down is exempt
+    let test_start = lines
+        .iter()
+        .position(|(raw, _, _)| {
+            raw.starts_with("#[cfg(") && raw.contains("test") && !raw.contains("not(test")
+        })
+        .unwrap_or(lines.len());
+
+    // a marker counts on the offending line itself or anywhere in the
+    // contiguous comment/attribute block directly above it
+    let has_marker = |at: usize, marker: &str| -> bool {
+        if lines[at].2.contains(marker) {
+            return true;
+        }
+        let mut j = at;
+        while j > 0 {
+            j -= 1;
+            let raw = &lines[j].0;
+            if raw.starts_with("//") || raw.starts_with("#[") {
+                if lines[j].2.contains(marker) {
+                    return true;
+                }
+            } else {
+                break;
+            }
+        }
+        false
+    };
+
+    let mut out = vec![];
+    let mut fail = |rule: &'static str, line: usize, message: String| {
+        out.push(LintViolation { rule, file: path.to_string(), line: line + 1, message });
+    };
+    for (idx, (_raw, code, _comment)) in lines.iter().enumerate().take(test_start) {
+        if contains_word(code, "unsafe") && !has_marker(idx, "SAFETY:") {
+            fail(
+                "unsafe-safety",
+                idx,
+                "`unsafe` without a `SAFETY:` comment explaining why it is sound".into(),
+            );
+        }
+        if contains_word(code, "SeqCst") && !has_marker(idx, "ORDERING:") {
+            fail(
+                "seqcst-ordering",
+                idx,
+                "`SeqCst` without an `ORDERING:` comment justifying the strongest ordering".into(),
+            );
+        }
+        if is_server && (code.contains(".unwrap()") || code.contains(".expect(")) {
+            fail(
+                "server-unwrap",
+                idx,
+                "no panicking result-handling in the server request path; return ERR instead"
+                    .into(),
+            );
+        }
+        if !is_sync_shim && code.contains("std::sync::atomic") {
+            fail(
+                "atomic-import",
+                idx,
+                "use crate::par::sync::atomic (the loom shim) instead of std::sync::atomic"
+                    .into(),
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(path: &str, src: &str) -> Vec<&'static str> {
+        lint_source(path, src).iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn unsafe_without_safety_flagged() {
+        let src = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        let v = lint_source("a.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "unsafe-safety");
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn safety_marker_suppresses() {
+        // same line
+        assert!(rules("a.rs", "unsafe { x() } // SAFETY: x is fine\n").is_empty());
+        // contiguous comment block above, including through an attribute
+        let src = "// SAFETY: slot is exclusively reserved\n#[inline]\nunsafe fn g() {}\n";
+        assert!(rules("a.rs", src).is_empty());
+        // a blank line breaks contiguity
+        let src = "// SAFETY: stale\n\nunsafe fn g() {}\n";
+        assert_eq!(rules("a.rs", src), vec!["unsafe-safety"]);
+    }
+
+    #[test]
+    fn seqcst_requires_ordering() {
+        let src = "fn f(a: &A) { a.store(1, Ordering::SeqCst); }\n";
+        assert_eq!(rules("a.rs", src), vec!["seqcst-ordering"]);
+        let src = "// ORDERING: store-load fence needed between X and Y\nfn f(a: &A) { a.store(1, Ordering::SeqCst); }\n";
+        assert!(rules("a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn server_unwrap_only_in_server_path() {
+        let src = "fn f(x: Option<u8>) -> u8 { x.unwrap() }\nfn g(r: R) { r.expect(\"boom\"); }\n";
+        assert_eq!(
+            rules("src/coordinator/server.rs", src),
+            vec!["server-unwrap", "server-unwrap"]
+        );
+        assert!(rules("src/coordinator/pipeline.rs", src).is_empty());
+    }
+
+    #[test]
+    fn atomic_import_allowed_only_in_shim() {
+        let src = "use std::sync::atomic::AtomicUsize;\n";
+        assert_eq!(rules("src/truss/pkt.rs", src), vec!["atomic-import"]);
+        assert!(rules("src/par/sync.rs", src).is_empty());
+    }
+
+    #[test]
+    fn strings_and_comments_are_not_code() {
+        let src = concat!(
+            "fn f() -> &'static str {\n",
+            "    // unsafe SeqCst std::sync::atomic in a comment is fine\n",
+            "    \"unsafe SeqCst std::sync::atomic .unwrap()\"\n",
+            "}\n"
+        );
+        assert!(rules("src/coordinator/server.rs", src).is_empty());
+    }
+
+    #[test]
+    fn multi_line_and_raw_strings_skipped() {
+        let src = "let a = \"line one\n  unsafe line two\";\nlet b = r#\"SeqCst \"quoted\" inside\"#;\n";
+        assert!(rules("a.rs", src).is_empty());
+        // raw string spanning lines
+        let src = "let c = r#\"\n unsafe\n SeqCst\n\"#;\n";
+        assert!(rules("a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        // a quote char literal must not open string mode and hide the
+        // unsafe that follows
+        let src = "fn f(c: char) -> bool { c == '\"' }\nfn g() { unsafe { h() } }\n";
+        assert_eq!(rules("a.rs", src), vec!["unsafe-safety"]);
+        // lifetimes don't start char-literal mode either
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }\nunsafe fn g() {}\n";
+        assert_eq!(rules("a.rs", src), vec!["unsafe-safety"]);
+    }
+
+    #[test]
+    fn word_boundaries_respected() {
+        // identifiers containing the keyword are not the keyword
+        let src = "fn f(unsafe_count: usize) -> usize { unsafe_count }\n";
+        assert!(rules("a.rs", src).is_empty());
+        assert!(contains_word("unsafe {", "unsafe"));
+        assert!(!contains_word("my_unsafe_fn()", "unsafe"));
+    }
+
+    #[test]
+    fn test_tail_is_exempt() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t() { unsafe { x() } }\n}\n";
+        assert!(rules("a.rs", src).is_empty());
+        let src = "#[cfg(all(test, not(loom)))]\nmod tests {\n    fn t() { unsafe { x() } }\n}\n";
+        assert!(rules("a.rs", src).is_empty());
+        // ...but unsafe *before* the test module is still caught
+        let src = "fn prod() { unsafe { x() } }\n#[cfg(test)]\nmod tests {}\n";
+        assert_eq!(rules("a.rs", src), vec!["unsafe-safety"]);
+    }
+
+    #[test]
+    fn violation_display_format() {
+        let v = LintViolation {
+            rule: "unsafe-safety",
+            file: "src/par/mod.rs".into(),
+            line: 42,
+            message: "msg".into(),
+        };
+        assert_eq!(v.to_string(), "src/par/mod.rs:42: [unsafe-safety] msg");
+    }
+
+    #[test]
+    fn lint_tree_walks_files() {
+        let dir = std::env::temp_dir().join(format!("trussx-lint-{}", std::process::id()));
+        std::fs::create_dir_all(dir.join("sub")).unwrap();
+        std::fs::write(dir.join("ok.rs"), "fn f() {}\n").unwrap();
+        std::fs::write(dir.join("sub/bad.rs"), "unsafe fn g() {}\n").unwrap();
+        std::fs::write(dir.join("notrust.txt"), "unsafe\n").unwrap();
+        let out = lint_tree(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+        assert_eq!(out.files_scanned, 2);
+        assert_eq!(out.violations.len(), 1);
+        assert!(out.violations[0].file.ends_with("bad.rs"));
+    }
+
+    #[test]
+    fn own_tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let out = lint_tree(&root).unwrap();
+        assert!(out.files_scanned > 10, "walked {} files", out.files_scanned);
+        let msgs: Vec<String> = out.violations.iter().map(|v| v.to_string()).collect();
+        assert!(msgs.is_empty(), "own sources must lint clean:\n{}", msgs.join("\n"));
+    }
+}

@@ -2,13 +2,14 @@
 //!
 //! ```text
 //! pallas decompose <graphspec> [--algo pkt|wc|ros|local] [--threads N]
-//!                  [--order nat|deg|kco] [--hist]
+//!                  [--order nat|deg|kco] [--hist] [--validate]
 //!                  [--compact-threshold F] [--no-bitsets]
 //! pallas stats <graphspec>
 //! pallas bench <id|all> [--scale S] [--threads N] [--smoke]
 //! pallas serve [--addr HOST:PORT]
 //! pallas generate <graphspec> --out FILE[.el|.bin]
 //! pallas report <trace.jsonl>
+//! pallas lint [root...]
 //! ```
 //!
 //! The global `--trace <path>` flag (any position) streams one JSONL
@@ -104,6 +105,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "serve" => cmd_serve(rest),
         "generate" => cmd_generate(rest),
         "report" => cmd_report(rest),
+        "lint" => cmd_lint(rest),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -115,13 +117,14 @@ fn dispatch(args: &[String]) -> Result<()> {
 fn print_help() {
     println!(
         "pallas — shared-memory graph truss decomposition (PKT)\n\n\
-         USAGE:\n  pallas decompose <graphspec> [--algo pkt|wc|ros|local] [--threads N] [--order nat|deg|kco] [--hist]\n                   [--compact-threshold F] [--no-bitsets]   (pkt peel tuning)\n  \
+         USAGE:\n  pallas decompose <graphspec> [--algo pkt|wc|ros|local] [--threads N] [--order nat|deg|kco] [--hist]\n                   [--compact-threshold F] [--no-bitsets]   (pkt peel tuning)\n                   [--validate]   (deep invariant checks; also via TRUSSX_VALIDATE=1)\n  \
          pallas stats <graphspec>\n  \
          pallas bench <table1|table2|table3|table4|fig4|fig5|fig6|ablate|pkt|xla|all> [--scale S] [--threads N] [--smoke]\n  \
          pallas query <graphspec> --vertex V [--k K]\n  \
          pallas serve [--addr HOST:PORT]\n  \
          pallas generate <graphspec> --out FILE(.el|.bin)\n  \
-         pallas report <trace.jsonl>\n\n\
+         pallas report <trace.jsonl>\n  \
+         pallas lint [root...]   (concurrency-hygiene source lint; default roots rust/src)\n\n\
          GLOBAL FLAGS:\n  --trace FILE   stream phase-span events (JSONL) to FILE\n\n\
          GRAPH SPECS:\n  suite:<name>  rmat:n=..,m=..  er:n=..,p=..  ba:n=..,k=..\n  \
          ws:n=..,k=..,beta=..  pp:blocks=..,size=..,pin=..,pout=..\n  complete:n=..  file:/path\n"
@@ -139,7 +142,7 @@ fn cmd_report(args: &[String]) -> Result<()> {
 }
 
 fn cmd_decompose(args: &[String]) -> Result<()> {
-    let o = Opts::parse(args, &["hist", "no-bitsets"])?;
+    let o = Opts::parse(args, &["hist", "no-bitsets", "validate"])?;
     let spec_str = o.positional.first().context("missing graph spec")?;
     let mut cfg = JobConfig::new(GraphSpec::parse(spec_str)?);
     if let Some(a) = o.get("algo") {
@@ -157,8 +160,12 @@ fn cmd_decompose(args: &[String]) -> Result<()> {
     if o.has("no-bitsets") {
         cfg.pkt.use_bitsets = false;
     }
+    cfg.validate = o.has("validate");
     let report = run_job(&cfg)?;
     println!("{}", report.summary());
+    if cfg.validate || trussx::validate::env_enabled() {
+        println!("validation: all checks passed ({:.4}s)", report.validate_secs);
+    }
     println!(
         "phases: support={:.4}s scan={:.4}s process={:.4}s (levels={}, sublevels={})",
         report.stats.support_secs,
@@ -239,11 +246,49 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let handle = serve(addr)?;
     println!("pallas server listening on {}", handle.addr);
     println!(
-        "protocol: DECOMP <spec> [algo=..] [threads=..] [order=..] [compact=..] [bitsets=..] | HIST <spec> | STATUS | METRICS | QUIT"
+        "protocol: DECOMP <spec> [algo=..] [threads=..] [order=..] [compact=..] [bitsets=..] [validate=..] | HIST <spec> | STATUS | METRICS | QUIT"
     );
     // foreground: block forever (Ctrl-C to stop)
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_lint(args: &[String]) -> Result<()> {
+    let o = Opts::parse(args, &[])?;
+    let roots: Vec<String> = if o.positional.is_empty() {
+        // default: the crate's own sources, wherever the binary runs from
+        ["rust/src", "src"]
+            .iter()
+            .map(|s| s.to_string())
+            .filter(|s| std::path::Path::new(s).is_dir())
+            .take(1)
+            .collect()
+    } else {
+        o.positional.clone()
+    };
+    if roots.is_empty() {
+        bail!("no source root found (run from the repo root or pass paths)");
+    }
+    let mut files = 0usize;
+    let mut violations = vec![];
+    for root in &roots {
+        let out = trussx::lint::lint_tree(std::path::Path::new(root))?;
+        files += out.files_scanned;
+        violations.extend(out.violations);
+    }
+    for v in &violations {
+        println!("{v}");
+    }
+    println!(
+        "pallas lint: {} file(s) scanned, {} violation(s)",
+        files,
+        violations.len()
+    );
+    if violations.is_empty() {
+        Ok(())
+    } else {
+        bail!("lint failed with {} violation(s)", violations.len());
     }
 }
 

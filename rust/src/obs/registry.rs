@@ -9,7 +9,7 @@
 //! metric hot path.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::par::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 
 /// Default duration buckets (seconds) for phase/latency histograms:

@@ -10,7 +10,7 @@
 
 use crate::obs::registry::{global, Histogram};
 use crate::obs::sink;
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::par::sync::atomic::{AtomicU64, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 

@@ -1,0 +1,119 @@
+//! Exhaustive interleaving models for the `par` primitives.
+//!
+//! Built only under `RUSTFLAGS="--cfg loom"` (see [`super::sync`] for
+//! how to run them). Each `model` call explores every schedule of its
+//! threads under the C11 memory model; loom's instrumented cells
+//! additionally fail any unsynchronized non-atomic access, so these
+//! tests prove both the computed values *and* the happens-before edges
+//! the `AtomicVec`/`AtomicBitset` safety comments claim.
+//!
+//! Thread counts stay at ≤ 3 (loom's practical limit): the protocols
+//! are pairwise, so two racing threads plus the main thread already
+//! cover every distinct interleaving class the peel produces.
+
+use super::sync::atomic::{AtomicBool, AtomicI32, Ordering};
+use super::sync::{model, thread, Arc};
+use super::{AtomicBitset, AtomicVec};
+
+/// Two writers race `push_batch`; after both join, the snapshot must
+/// hold every element exactly once — the disjoint-reservation argument
+/// of `AtomicVec`'s `Sync` impl. Loom also verifies no two `with_mut`
+/// accesses to the same slot are ever unsynchronized.
+#[test]
+fn loom_atomicvec_disjoint_reservations() {
+    model(|| {
+        let av = Arc::new(AtomicVec::<u32>::with_capacity(4));
+        let a = Arc::clone(&av);
+        let b = Arc::clone(&av);
+        let t1 = thread::spawn(move || {
+            a.push_batch(&[1, 2]);
+        });
+        let t2 = thread::spawn(move || {
+            b.push_batch(&[3]);
+        });
+        t1.join().unwrap();
+        t2.join().unwrap();
+        let mut got = av.snapshot();
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2, 3]);
+    });
+}
+
+/// The peel's flag transitions: `fetch_or` (enter inNext) racing
+/// `fetch_and` (leave inCurr) on bits of the *same word*. Neither RMW
+/// may lose the other's update.
+#[test]
+fn loom_bitset_rmw_no_lost_updates() {
+    model(|| {
+        let bs = Arc::new(AtomicBitset::new(8));
+        bs.set(0); // pre-set: must survive the concurrent RMWs below
+        let b1 = Arc::clone(&bs);
+        let b2 = Arc::clone(&bs);
+        let t1 = thread::spawn(move || b1.set(3));
+        let t2 = thread::spawn(move || b2.clear(0));
+        t1.join().unwrap();
+        t2.join().unwrap();
+        assert!(bs.get(3), "fetch_or lost against fetch_and");
+        assert!(!bs.get(0), "fetch_and lost against fetch_or");
+        assert_eq!(bs.count_ones(), 1);
+    });
+}
+
+/// The level-boundary handoff: a writer fills the `next` frontier, then
+/// publishes with a release store (standing in for the region barrier);
+/// a reader that acquires the flag must see the *whole* frontier, not
+/// just the length. This is the edge `as_slice`/`snapshot` rely on — the
+/// `len` counter itself does not publish slot contents.
+#[test]
+fn loom_level_boundary_publish() {
+    model(|| {
+        let next = Arc::new(AtomicVec::<u32>::with_capacity(2));
+        let ready = Arc::new(AtomicBool::new(false));
+        let n = Arc::clone(&next);
+        let r = Arc::clone(&ready);
+        let t = thread::spawn(move || {
+            n.push_batch(&[7, 8]);
+            // ORDERING: Release pairs with the Acquire below; everything
+            // written before this store is visible after that load.
+            r.store(true, Ordering::Release);
+        });
+        if ready.load(Ordering::Acquire) {
+            assert_eq!(next.snapshot(), vec![7, 8]);
+        }
+        t.join().unwrap();
+    });
+}
+
+/// `truss::pkt::decrement`'s claim protocol at level `l` with `S[e] =
+/// l + 1`: two racing decrementers, exactly one may observe the
+/// `l+1 → l` transition (and so append the edge to the next frontier),
+/// and the overshoot correction must leave `S[e] == l` in every
+/// schedule.
+#[test]
+fn loom_decrement_claims_exactly_once() {
+    model(|| {
+        let s = Arc::new(AtomicI32::new(2));
+        let level: i32 = 1;
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let s = Arc::clone(&s);
+                thread::spawn(move || {
+                    // mirror of pkt::decrement (Alg. 5 lines 17–28)
+                    if s.load(Ordering::Relaxed) > level {
+                        let old = s.fetch_sub(1, Ordering::AcqRel);
+                        if old == level + 1 {
+                            return 1; // claimed the transition
+                        }
+                        if old <= level {
+                            s.fetch_add(1, Ordering::AcqRel); // overshoot undo
+                        }
+                    }
+                    0
+                })
+            })
+            .collect();
+        let wins: i32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(wins, 1, "exactly one thread may claim the transition");
+        assert_eq!(s.load(Ordering::Relaxed), level);
+    });
+}

@@ -1,0 +1,380 @@
+//! The shared-memory parallel runtime substrate.
+//!
+//! The paper's OpenMP idioms, rebuilt on `std::thread` + atomics (no
+//! external crates are available offline):
+//!
+//! - [`Pool::region`] — an OpenMP `parallel` region: `t` scoped threads
+//!   run the same closure, coordinating through [`RegionCtx::barrier`];
+//! - [`RegionCtx::for_dynamic`] — `omp for schedule(dynamic, chunk)`:
+//!   work distributed chunk-at-a-time from a shared atomic counter;
+//! - [`RegionCtx::for_static`] — `omp for schedule(static)`: contiguous
+//!   per-thread slabs (used by the SCAN phase, like the paper);
+//! - [`AtomicVec`] — a fixed-capacity concurrent append buffer: the
+//!   `curr`/`next` frontier arrays with the paper's thread-local `buff`
+//!   batching (one atomic fetch-add per `s` items instead of per item).
+//!
+//! All synchronization primitives come from the [`sync`] shim, so the
+//! lock-free pieces (`AtomicVec`, [`AtomicBitset`]) compile against the
+//! `loom` model checker under `RUSTFLAGS="--cfg loom"` and their
+//! happens-before protocols are exhaustively checked by the
+//! `loom_model` tests. The thread-pool half ([`Pool`]/[`RegionCtx`])
+//! stays `std`-only: loom has no scoped threads or barriers, and the
+//! region barrier is itself the synchronization the models reproduce
+//! with an explicit release/acquire publish.
+
+pub mod sync;
+
+#[cfg(not(loom))]
+mod runtime;
+#[cfg(not(loom))]
+pub use runtime::{Counter, Pool, RegionCtx};
+
+#[cfg(all(test, loom))]
+mod loom_model;
+
+use self::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use self::sync::UnsafeCell;
+use std::mem::MaybeUninit;
+
+/// Default chunk sizes from the paper's §4.1 (support computation: 10,
+/// edge processing: 4).
+pub const CHUNK_SUPPORT: usize = 10;
+pub const CHUNK_PROCESS: usize = 4;
+/// Thread-local frontier buffer size (`buff` in Alg. 4/5).
+pub const BUFF_SIZE: usize = 256;
+
+/// Fixed-capacity vector supporting concurrent batched appends — the
+/// `curr` / `next` frontier arrays of Alg. 4/5.
+///
+/// Safety model: writers reserve disjoint ranges with one `fetch_add`
+/// and copy their batch into the reservation; reads of `as_slice` must
+/// be separated from writes by a barrier (the level-synchronous
+/// structure guarantees this). `clear` must also be barrier-separated.
+///
+/// Storage is one [`sync::UnsafeCell`] *per slot*, not a single cell
+/// around the whole buffer: concurrent writers then take raw pointers to
+/// disjoint cells and never materialize overlapping `&mut` references to
+/// the shared buffer, which the previous single-cell layout did — that
+/// is undefined behavior under Stacked Borrows even when the written
+/// ranges are disjoint, and both Miri and loom reject it.
+pub struct AtomicVec<T: Copy> {
+    slots: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    len: AtomicUsize,
+}
+
+// SAFETY: `AtomicVec` hands shared references across threads, so it must
+// justify `Sync`/`Send` itself: (1) writers reserve disjoint slot ranges
+// with one atomic `fetch_add` on `len`, so no two threads ever write the
+// same slot between two `clear` calls; (2) reads (`as_slice`/`snapshot`)
+// are only legal once a happens-before edge (region barrier, join, or a
+// release/acquire publish) separates them from all writes — the
+// level-synchronous peel provides exactly that, and the loom models in
+// `par::loom_model` check the protocol; (3) `T: Copy` keeps drops
+// trivial, so an uninitialized tail beyond `len` is never touched.
+unsafe impl<T: Copy + Send> Send for AtomicVec<T> {}
+// SAFETY: see the `Send` impl directly above — disjoint reservations
+// plus barrier-separated reads make shared `&self` use race-free.
+unsafe impl<T: Copy + Send> Sync for AtomicVec<T> {}
+
+impl<T: Copy> AtomicVec<T> {
+    /// An empty vector with room for `cap` elements. All slots start
+    /// uninitialized; no `unsafe` is needed because `MaybeUninit` slots
+    /// are valid in any state.
+    pub fn with_capacity(cap: usize) -> Self {
+        let slots = (0..cap).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect();
+        Self { slots, len: AtomicUsize::new(0) }
+    }
+
+    /// Append a batch; returns the start offset of the reservation.
+    /// Panics if capacity would be exceeded (frontiers are pre-sized to
+    /// `m`, which is a hard upper bound).
+    pub fn push_batch(&self, items: &[T]) -> usize {
+        // ORDERING: the fetch_add only needs atomicity — it hands out
+        // disjoint reservations. It does NOT publish the slot contents
+        // (they are written after it); publication to readers is the
+        // caller's barrier/join. AcqRel keeps the counter itself ordered
+        // against `clear`'s release store on reuse across phases.
+        let start = self.len.fetch_add(items.len(), Ordering::AcqRel);
+        assert!(
+            start + items.len() <= self.slots.len(),
+            "AtomicVec overflow: {} + {} > {}",
+            start,
+            items.len(),
+            self.slots.len()
+        );
+        for (i, &x) in items.iter().enumerate() {
+            // SAFETY: slots [start, start+items.len()) were reserved
+            // exclusively for this thread by the fetch_add above; no
+            // other thread writes them, and no reader touches them until
+            // a later barrier orders these writes before its reads.
+            self.slots[start + i].with_mut(|p| unsafe { p.write(MaybeUninit::new(x)) });
+        }
+        start
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::Acquire)
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of the current contents. Caller must ensure no writer is
+    /// concurrent (barrier-separated phases).
+    #[cfg(not(loom))]
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        let len = self.len();
+        let ptr = self.slots.as_ptr();
+        // SAFETY: layout — `sync::UnsafeCell<MaybeUninit<T>>` is
+        // repr(transparent) over `std::cell::UnsafeCell<MaybeUninit<T>>`,
+        // which is repr(transparent) over `MaybeUninit<T>`, which has the
+        // layout of `T`; the pointer cast is therefore sound. Init —
+        // every slot below `len` was fully written before the barrier
+        // separating writers from this reader. Aliasing — no `&mut` to
+        // these slots exists while the shared slice lives, because
+        // writes only happen in barrier-separated phases.
+        unsafe { std::slice::from_raw_parts(ptr as *const T, len) }
+    }
+
+    /// Owned copy of the published prefix. Same protocol as
+    /// [`AtomicVec::as_slice`]; this is the read path the loom models
+    /// use, since loom requires every cell access to go through
+    /// `with`/`with_mut`.
+    pub fn snapshot(&self) -> Vec<T> {
+        #[cfg(not(loom))]
+        {
+            self.as_slice().to_vec()
+        }
+        #[cfg(loom)]
+        {
+            let len = self.len();
+            (0..len)
+                // SAFETY: slots below `len` were initialized by writers
+                // that happen-before this read (barrier/join/publish);
+                // loom verifies that edge on every `with` access.
+                .map(|i| self.slots[i].with(|p| unsafe { (*p).assume_init() }))
+                .collect()
+        }
+    }
+
+    /// Reset length to zero (single-threaded, barrier-separated).
+    #[inline]
+    pub fn clear(&self) {
+        self.len.store(0, Ordering::Release);
+    }
+}
+
+/// Per-thread buffered writer into an [`AtomicVec`] — the paper's `buff`
+/// trick reducing atomic ops from O(|next|) to O(|next| / s).
+pub struct BatchWriter<'a, T: Copy> {
+    target: &'a AtomicVec<T>,
+    buf: Vec<T>,
+}
+
+impl<'a, T: Copy> BatchWriter<'a, T> {
+    pub fn new(target: &'a AtomicVec<T>) -> Self {
+        Self { target, buf: Vec::with_capacity(BUFF_SIZE) }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: T) {
+        self.buf.push(x);
+        if self.buf.len() == BUFF_SIZE {
+            self.flush();
+        }
+    }
+
+    #[inline]
+    pub fn flush(&mut self) {
+        if !self.buf.is_empty() {
+            self.target.push_batch(&self.buf);
+            self.buf.clear();
+        }
+    }
+}
+
+impl<T: Copy> Drop for BatchWriter<'_, T> {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+/// Fixed-length concurrent bitset: one bit per flag, packed 64 per word,
+/// mutated with word-level `fetch_or` / `fetch_and`.
+///
+/// This is the packed replacement for the peel's `Vec<AtomicBool>` flag
+/// arrays (`processed` / `inCurr` / `inNext`): an 8× reduction in flag
+/// memory and scan bandwidth, which is exactly the traffic the paper's
+/// §4 identifies as the bottleneck on its 24-core server.
+///
+/// All operations are `Relaxed`: like the byte-wide flags they replace,
+/// cross-phase visibility comes from the region barriers, not from the
+/// flag accesses themselves. Two threads touching different bits of the
+/// same word stay correct (the RMW is atomic — the loom model
+/// `loom_bitset_rmw_no_lost_updates` checks it), they just contend.
+pub struct AtomicBitset {
+    words: Box<[AtomicU64]>,
+    len: usize,
+}
+
+impl AtomicBitset {
+    /// A bitset of `len` bits, all zero.
+    pub fn new(len: usize) -> Self {
+        let words = (0..len.div_ceil(64)).map(|_| AtomicU64::new(0)).collect();
+        Self { words, len }
+    }
+
+    /// Number of bits.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Read bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i >> 6].load(Ordering::Relaxed) >> (i & 63)) & 1 != 0
+    }
+
+    /// Set bit `i` to 1.
+    #[inline]
+    pub fn set(&self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6].fetch_or(1 << (i & 63), Ordering::Relaxed);
+    }
+
+    /// Set bit `i` to 0.
+    #[inline]
+    pub fn clear(&self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6].fetch_and(!(1 << (i & 63)), Ordering::Relaxed);
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.load(Ordering::Relaxed).count_ones() as usize).sum()
+    }
+
+    /// Zero every bit (single-threaded, barrier-separated).
+    pub fn clear_all(&self) {
+        for w in self.words.iter() {
+            w.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_vec_concurrent_batches() {
+        // Miri executes this race-heavy test under its interpreter:
+        // shrink the volume so it finishes, keep the full size natively
+        let per: u32 = if cfg!(miri) { 600 } else { 10_000 };
+        let av: AtomicVec<u32> = AtomicVec::with_capacity(4 * per as usize);
+        let pool = Pool::new(4);
+        pool.region(|ctx| {
+            let mut w = BatchWriter::new(&av);
+            for i in 0..per {
+                w.push(ctx.tid as u32 * per + i);
+            }
+        });
+        assert_eq!(av.len(), 4 * per as usize);
+        let mut all: Vec<u32> = av.as_slice().to_vec();
+        all.sort_unstable();
+        assert_eq!(all, (0..4 * per).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn atomic_vec_clear_reuse() {
+        let av: AtomicVec<u32> = AtomicVec::with_capacity(8);
+        av.push_batch(&[1, 2, 3]);
+        assert_eq!(av.as_slice(), &[1, 2, 3]);
+        assert_eq!(av.snapshot(), vec![1, 2, 3]);
+        av.clear();
+        assert!(av.is_empty());
+        av.push_batch(&[9]);
+        assert_eq!(av.as_slice(), &[9]);
+    }
+
+    #[test]
+    #[should_panic(expected = "AtomicVec overflow")]
+    fn atomic_vec_overflow_panics() {
+        let av: AtomicVec<u32> = AtomicVec::with_capacity(2);
+        av.push_batch(&[1, 2, 3]);
+    }
+
+    #[test]
+    fn bitset_basic_ops() {
+        // length deliberately not a multiple of 64: the last word is
+        // partial and word-boundary bits (63, 64, 65) must not alias
+        let bs = AtomicBitset::new(130);
+        assert_eq!(bs.len(), 130);
+        assert!(!bs.is_empty());
+        assert_eq!(bs.count_ones(), 0);
+        for i in [0usize, 1, 63, 64, 65, 127, 128, 129] {
+            assert!(!bs.get(i));
+            bs.set(i);
+            assert!(bs.get(i), "bit {i}");
+        }
+        assert_eq!(bs.count_ones(), 8);
+        // neighbors of the set bits stayed clear
+        for i in [2usize, 62, 66, 126] {
+            assert!(!bs.get(i), "bit {i}");
+        }
+        bs.clear(64);
+        assert!(!bs.get(64));
+        assert!(bs.get(63) && bs.get(65), "clear must not touch siblings");
+        assert_eq!(bs.count_ones(), 7);
+        bs.clear_all();
+        assert_eq!(bs.count_ones(), 0);
+    }
+
+    #[test]
+    fn bitset_empty() {
+        let bs = AtomicBitset::new(0);
+        assert!(bs.is_empty());
+        assert_eq!(bs.count_ones(), 0);
+    }
+
+    #[test]
+    fn bitset_concurrent_interleaved_sets() {
+        // 4 threads set interleaved bits (thread t owns bits ≡ t mod 4),
+        // so every word is hammered by all threads concurrently; no set
+        // may be lost and no foreign bit may appear
+        let total = if cfg!(miri) { 64 * 3 + 13 } else { 64 * 37 + 13 };
+        let bs = AtomicBitset::new(total);
+        let pool = Pool::new(4);
+        pool.region(|ctx| {
+            let mut i = ctx.tid;
+            while i < total {
+                bs.set(i);
+                i += ctx.nthreads;
+            }
+        });
+        assert_eq!(bs.count_ones(), total);
+        // clear every other bit concurrently; the rest must survive
+        pool.region(|ctx| {
+            let mut i = ctx.tid * 2;
+            while i < total {
+                bs.clear(i);
+                i += ctx.nthreads * 2;
+            }
+        });
+        assert_eq!(bs.count_ones(), total / 2);
+        for i in 0..total {
+            assert_eq!(bs.get(i), i % 2 == 1, "bit {i}");
+        }
+    }
+}

@@ -1,30 +1,16 @@
-//! The shared-memory parallel runtime substrate.
+//! The thread-pool half of the runtime: OpenMP-style regions, barriers,
+//! and the static/dynamic schedulers.
 //!
-//! The paper's OpenMP idioms, rebuilt on `std::thread` + atomics (no
-//! external crates are available offline):
-//!
-//! - [`Pool::region`] — an OpenMP `parallel` region: `t` scoped threads
-//!   run the same closure, coordinating through [`RegionCtx::barrier`];
-//! - [`RegionCtx::for_dynamic`] — `omp for schedule(dynamic, chunk)`:
-//!   work distributed chunk-at-a-time from a shared atomic counter;
-//! - [`RegionCtx::for_static`] — `omp for schedule(static)`: contiguous
-//!   per-thread slabs (used by the SCAN phase, like the paper);
-//! - [`AtomicVec`] — a fixed-capacity concurrent append buffer: the
-//!   `curr`/`next` frontier arrays with the paper's thread-local `buff`
-//!   batching (one atomic fetch-add per `s` items instead of per item).
+//! Kept out of the loom build (`cfg(not(loom))` in `par`): loom models
+//! neither scoped threads nor `std::sync::Barrier`, and the lock-free
+//! structures it *does* model ([`super::AtomicVec`],
+//! [`super::AtomicBitset`]) live in the parent module. Atomics still go
+//! through the [`super::sync`] shim so the whole crate has a single
+//! audited import point.
 
-use std::cell::UnsafeCell;
-use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use super::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Barrier, OnceLock};
 use std::time::Instant;
-
-/// Default chunk sizes from the paper's §4.1 (support computation: 10,
-/// edge processing: 4).
-pub const CHUNK_SUPPORT: usize = 10;
-pub const CHUNK_PROCESS: usize = 4;
-/// Thread-local frontier buffer size (`buff` in Alg. 4/5).
-pub const BUFF_SIZE: usize = 256;
 
 /// Load-imbalance ratio buckets (max-items / mean-items per region):
 /// 1.0 is perfect balance, the tail captures pathological skew.
@@ -250,188 +236,10 @@ impl Counter {
     }
 }
 
-/// Fixed-capacity vector supporting concurrent batched appends — the
-/// `curr` / `next` frontier arrays of Alg. 4/5.
-///
-/// Safety model: writers reserve disjoint ranges with one `fetch_add`
-/// and copy their batch into the reservation; reads of `as_slice` must
-/// be separated from writes by a barrier (the level-synchronous
-/// structure guarantees this). `clear` must also be barrier-separated.
-pub struct AtomicVec<T: Copy> {
-    buf: UnsafeCell<Box<[MaybeUninit<T>]>>,
-    len: AtomicUsize,
-}
-
-// SAFETY: disjoint-reservation writes + barrier-separated reads, as
-// documented above; T: Copy keeps drops trivial.
-unsafe impl<T: Copy + Send> Send for AtomicVec<T> {}
-unsafe impl<T: Copy + Send> Sync for AtomicVec<T> {}
-
-impl<T: Copy> AtomicVec<T> {
-    pub fn with_capacity(cap: usize) -> Self {
-        let mut v: Vec<MaybeUninit<T>> = Vec::with_capacity(cap);
-        // SAFETY: MaybeUninit contents need no initialization.
-        unsafe { v.set_len(cap) };
-        Self {
-            buf: UnsafeCell::new(v.into_boxed_slice()),
-            len: AtomicUsize::new(0),
-        }
-    }
-
-    /// Append a batch; returns the start offset of the reservation.
-    /// Panics if capacity would be exceeded (frontiers are pre-sized to
-    /// `m`, which is a hard upper bound).
-    pub fn push_batch(&self, items: &[T]) -> usize {
-        let start = self.len.fetch_add(items.len(), Ordering::AcqRel);
-        let buf = unsafe { &mut *self.buf.get() };
-        assert!(
-            start + items.len() <= buf.len(),
-            "AtomicVec overflow: {} + {} > {}",
-            start,
-            items.len(),
-            buf.len()
-        );
-        for (i, &x) in items.iter().enumerate() {
-            buf[start + i] = MaybeUninit::new(x);
-        }
-        start
-    }
-
-    #[inline]
-    pub fn len(&self) -> usize {
-        self.len.load(Ordering::Acquire)
-    }
-
-    #[inline]
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-
-    /// Snapshot of the current contents. Caller must ensure no writer is
-    /// concurrent (barrier-separated phases).
-    #[inline]
-    pub fn as_slice(&self) -> &[T] {
-        let len = self.len();
-        let buf = unsafe { &*self.buf.get() };
-        // SAFETY: elements < len were fully written before the barrier.
-        unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const T, len) }
-    }
-
-    /// Reset length to zero (single-threaded, barrier-separated).
-    #[inline]
-    pub fn clear(&self) {
-        self.len.store(0, Ordering::Release);
-    }
-}
-
-/// Per-thread buffered writer into an [`AtomicVec`] — the paper's `buff`
-/// trick reducing atomic ops from O(|next|) to O(|next| / s).
-pub struct BatchWriter<'a, T: Copy> {
-    target: &'a AtomicVec<T>,
-    buf: Vec<T>,
-}
-
-impl<'a, T: Copy> BatchWriter<'a, T> {
-    pub fn new(target: &'a AtomicVec<T>) -> Self {
-        Self { target, buf: Vec::with_capacity(BUFF_SIZE) }
-    }
-
-    #[inline]
-    pub fn push(&mut self, x: T) {
-        self.buf.push(x);
-        if self.buf.len() == BUFF_SIZE {
-            self.flush();
-        }
-    }
-
-    #[inline]
-    pub fn flush(&mut self) {
-        if !self.buf.is_empty() {
-            self.target.push_batch(&self.buf);
-            self.buf.clear();
-        }
-    }
-}
-
-impl<T: Copy> Drop for BatchWriter<'_, T> {
-    fn drop(&mut self) {
-        self.flush();
-    }
-}
-
-/// Fixed-length concurrent bitset: one bit per flag, packed 64 per word,
-/// mutated with word-level `fetch_or` / `fetch_and`.
-///
-/// This is the packed replacement for the peel's `Vec<AtomicBool>` flag
-/// arrays (`processed` / `inCurr` / `inNext`): an 8× reduction in flag
-/// memory and scan bandwidth, which is exactly the traffic the paper's
-/// §4 identifies as the bottleneck on its 24-core server.
-///
-/// All operations are `Relaxed`: like the byte-wide flags they replace,
-/// cross-phase visibility comes from the region barriers, not from the
-/// flag accesses themselves. Two threads touching different bits of the
-/// same word stay correct (the RMW is atomic), they just contend.
-pub struct AtomicBitset {
-    words: Box<[AtomicU64]>,
-    len: usize,
-}
-
-impl AtomicBitset {
-    /// A bitset of `len` bits, all zero.
-    pub fn new(len: usize) -> Self {
-        let words = (0..len.div_ceil(64)).map(|_| AtomicU64::new(0)).collect();
-        Self { words, len }
-    }
-
-    /// Number of bits.
-    #[inline]
-    pub fn len(&self) -> usize {
-        self.len
-    }
-
-    #[inline]
-    pub fn is_empty(&self) -> bool {
-        self.len == 0
-    }
-
-    /// Read bit `i`.
-    #[inline]
-    pub fn get(&self, i: usize) -> bool {
-        debug_assert!(i < self.len);
-        (self.words[i >> 6].load(Ordering::Relaxed) >> (i & 63)) & 1 != 0
-    }
-
-    /// Set bit `i` to 1.
-    #[inline]
-    pub fn set(&self, i: usize) {
-        debug_assert!(i < self.len);
-        self.words[i >> 6].fetch_or(1 << (i & 63), Ordering::Relaxed);
-    }
-
-    /// Set bit `i` to 0.
-    #[inline]
-    pub fn clear(&self, i: usize) {
-        debug_assert!(i < self.len);
-        self.words[i >> 6].fetch_and(!(1 << (i & 63)), Ordering::Relaxed);
-    }
-
-    /// Number of set bits.
-    pub fn count_ones(&self) -> usize {
-        self.words.iter().map(|w| w.load(Ordering::Relaxed).count_ones() as usize).sum()
-    }
-
-    /// Zero every bit (single-threaded, barrier-separated).
-    pub fn clear_all(&self) {
-        for w in self.words.iter() {
-            w.store(0, Ordering::Relaxed);
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
+    use super::super::sync::atomic::AtomicBool;
     use super::*;
-    use std::sync::atomic::AtomicU64;
 
     #[test]
     fn region_runs_all_threads() {
@@ -448,7 +256,7 @@ mod tests {
         let pool = Pool::new(1);
         // would not compile with FnMut across threads; single-thread path
         // still must run exactly once
-        let hit_cell = std::sync::atomic::AtomicBool::new(false);
+        let hit_cell = AtomicBool::new(false);
         pool.region(|ctx| {
             assert_eq!(ctx.nthreads, 1);
             hit_cell.store(true, Ordering::Relaxed);
@@ -459,7 +267,7 @@ mod tests {
     #[test]
     fn dynamic_for_covers_all_items_once() {
         let pool = Pool::new(4);
-        let total = 10_007;
+        let total = if cfg!(miri) { 507 } else { 10_007 };
         let marks: Vec<AtomicU64> = (0..total).map(|_| AtomicU64::new(0)).collect();
         pool.for_dynamic(total, 7, |i| {
             marks[i].fetch_add(1, Ordering::Relaxed);
@@ -519,49 +327,20 @@ mod tests {
         let phase1 = AtomicUsize::new(0);
         let ok = AtomicUsize::new(0);
         pool.region(|ctx| {
-            phase1.fetch_add(1, Ordering::SeqCst);
+            // ORDERING: Relaxed is enough — the barrier between the two
+            // phases is the synchronization under test; it must order
+            // every phase-1 increment before every phase-2 load without
+            // help from the accesses themselves. (SeqCst here would mask
+            // a broken barrier, which is exactly what the test is for.)
+            phase1.fetch_add(1, Ordering::Relaxed);
             ctx.barrier();
             // after the barrier every thread must observe all 4 phase-1
             // increments
-            if phase1.load(Ordering::SeqCst) == 4 {
-                ok.fetch_add(1, Ordering::SeqCst);
+            if phase1.load(Ordering::Relaxed) == 4 {
+                ok.fetch_add(1, Ordering::Relaxed);
             }
         });
-        assert_eq!(ok.load(Ordering::SeqCst), 4);
-    }
-
-    #[test]
-    fn atomic_vec_concurrent_batches() {
-        let av: AtomicVec<u32> = AtomicVec::with_capacity(40_000);
-        let pool = Pool::new(4);
-        pool.region(|ctx| {
-            let mut w = BatchWriter::new(&av);
-            for i in 0..10_000u32 {
-                w.push(ctx.tid as u32 * 10_000 + i);
-            }
-        });
-        assert_eq!(av.len(), 40_000);
-        let mut all: Vec<u32> = av.as_slice().to_vec();
-        all.sort_unstable();
-        assert_eq!(all, (0..40_000u32).collect::<Vec<_>>());
-    }
-
-    #[test]
-    fn atomic_vec_clear_reuse() {
-        let av: AtomicVec<u32> = AtomicVec::with_capacity(8);
-        av.push_batch(&[1, 2, 3]);
-        assert_eq!(av.as_slice(), &[1, 2, 3]);
-        av.clear();
-        assert!(av.is_empty());
-        av.push_batch(&[9]);
-        assert_eq!(av.as_slice(), &[9]);
-    }
-
-    #[test]
-    #[should_panic(expected = "AtomicVec overflow")]
-    fn atomic_vec_overflow_panics() {
-        let av: AtomicVec<u32> = AtomicVec::with_capacity(2);
-        av.push_batch(&[1, 2, 3]);
+        assert_eq!(ok.load(Ordering::Relaxed), 4);
     }
 
     #[test]
@@ -576,68 +355,5 @@ mod tests {
     fn pool_threads_from_env_parse() {
         // just exercise the default path; value depends on machine
         assert!(Pool::default_threads() >= 1);
-    }
-
-    #[test]
-    fn bitset_basic_ops() {
-        // length deliberately not a multiple of 64: the last word is
-        // partial and word-boundary bits (63, 64, 65) must not alias
-        let bs = AtomicBitset::new(130);
-        assert_eq!(bs.len(), 130);
-        assert!(!bs.is_empty());
-        assert_eq!(bs.count_ones(), 0);
-        for i in [0usize, 1, 63, 64, 65, 127, 128, 129] {
-            assert!(!bs.get(i));
-            bs.set(i);
-            assert!(bs.get(i), "bit {i}");
-        }
-        assert_eq!(bs.count_ones(), 8);
-        // neighbors of the set bits stayed clear
-        for i in [2usize, 62, 66, 126] {
-            assert!(!bs.get(i), "bit {i}");
-        }
-        bs.clear(64);
-        assert!(!bs.get(64));
-        assert!(bs.get(63) && bs.get(65), "clear must not touch siblings");
-        assert_eq!(bs.count_ones(), 7);
-        bs.clear_all();
-        assert_eq!(bs.count_ones(), 0);
-    }
-
-    #[test]
-    fn bitset_empty() {
-        let bs = AtomicBitset::new(0);
-        assert!(bs.is_empty());
-        assert_eq!(bs.count_ones(), 0);
-    }
-
-    #[test]
-    fn bitset_concurrent_interleaved_sets() {
-        // 4 threads set interleaved bits (thread t owns bits ≡ t mod 4),
-        // so every word is hammered by all threads concurrently; no set
-        // may be lost and no foreign bit may appear
-        let total = 64 * 37 + 13;
-        let bs = AtomicBitset::new(total);
-        let pool = Pool::new(4);
-        pool.region(|ctx| {
-            let mut i = ctx.tid;
-            while i < total {
-                bs.set(i);
-                i += ctx.nthreads;
-            }
-        });
-        assert_eq!(bs.count_ones(), total);
-        // clear every other bit concurrently; the rest must survive
-        pool.region(|ctx| {
-            let mut i = ctx.tid * 2;
-            while i < total {
-                bs.clear(i);
-                i += ctx.nthreads * 2;
-            }
-        });
-        assert_eq!(bs.count_ones(), total / 2);
-        for i in 0..total {
-            assert_eq!(bs.get(i), i % 2 == 1, "bit {i}");
-        }
     }
 }

@@ -1,0 +1,82 @@
+//! The `std`/`loom` synchronization shim.
+//!
+//! Every atomic, `Arc`, `Mutex`, thread handle, and unsafe cell used by
+//! concurrency-bearing code goes through this module instead of
+//! `std::sync` directly (the `pallas lint` pass enforces this for
+//! `std::sync::atomic`). A normal build re-exports `std`; building with
+//! `RUSTFLAGS="--cfg loom"` swaps in the `loom` model checker's
+//! instrumented replacements, so the model tests in `par::loom_model`
+//! can exhaustively explore thread schedules and catch real memory-order
+//! bugs instead of whatever interleavings one machine happens to produce.
+//!
+//! `loom` is not declared in `Cargo.toml` — the offline registry does
+//! not carry it (same policy as the `xla` feature's missing dependency).
+//! The CI loom job adds it on the fly; locally:
+//!
+//! ```text
+//! cargo add loom
+//! RUSTFLAGS="--cfg loom" cargo test -p trussx --lib loom_
+//! ```
+
+/// The atomic types and `Ordering` (`std::sync::atomic` or loom's).
+#[cfg(not(loom))]
+pub use std::sync::atomic;
+
+#[cfg(loom)]
+pub use loom::sync::atomic;
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Mutex};
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Mutex};
+
+#[cfg(not(loom))]
+pub use std::thread;
+
+#[cfg(loom)]
+pub use loom::thread;
+
+/// Run a closure under loom's exhaustive scheduler (model tests only).
+#[cfg(loom)]
+pub use loom::model;
+
+#[cfg(loom)]
+pub use loom::cell::UnsafeCell;
+
+/// A `loom::cell::UnsafeCell`-shaped wrapper over [`std::cell::UnsafeCell`].
+///
+/// Loom's cell only grants access through `with`/`with_mut` closures so
+/// it can track every read/write and fail the model on an unsynchronized
+/// pair; production code adopts the same closure API so one source text
+/// compiles against both. The wrapper itself stays safe — it only hands
+/// out raw pointers, and each dereference site carries its own `SAFETY:`
+/// justification.
+#[cfg(not(loom))]
+#[derive(Debug, Default)]
+#[repr(transparent)]
+pub struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+#[cfg(not(loom))]
+impl<T> UnsafeCell<T> {
+    #[inline]
+    pub fn new(data: T) -> Self {
+        Self(std::cell::UnsafeCell::new(data))
+    }
+
+    /// Shared access: the closure receives a `*const T` it may read if
+    /// no concurrent writer exists (loom verifies this; std trusts the
+    /// caller's protocol).
+    #[inline]
+    pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+        f(self.0.get())
+    }
+
+    /// Exclusive access: the closure receives a `*mut T` it may write if
+    /// no other access is concurrent (loom verifies this; std trusts the
+    /// caller's protocol).
+    #[inline]
+    pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        f(self.0.get())
+    }
+}

@@ -10,7 +10,7 @@
 
 use crate::graph::{EdgeGraph, Graph, Vertex};
 use crate::par::{Counter, Pool, CHUNK_SUPPORT};
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use crate::par::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 /// Serial oriented triangle count: Σ_u Σ_{v ∈ N⁺(u)} |N⁺(u) ∩ N⁺(v)|
 /// by sorted merge. Exact, allocation-free.

@@ -14,7 +14,7 @@ use crate::graph::EdgeGraph;
 use crate::par::{Counter, Pool, CHUNK_PROCESS};
 use crate::triangle::support_am4;
 use crate::truss::{PktStats, TrussResult};
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use crate::par::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::time::Instant;
 
 /// Run the local algorithm. `max_rounds` caps the iteration count

@@ -29,7 +29,7 @@ use crate::graph::{compact_edges, EdgeGraph, EdgeId};
 use crate::obs;
 use crate::par::{AtomicBitset, AtomicVec, BatchWriter, Counter, Pool, CHUNK_PROCESS};
 use crate::triangle::support_am4;
-use std::sync::atomic::{AtomicBool, AtomicI32, AtomicI64, AtomicU64, Ordering};
+use crate::par::sync::atomic::{AtomicBool, AtomicI32, AtomicI64, AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 
 /// Tuning knobs for the peel. `Default` enables both optimizations.
@@ -298,6 +298,11 @@ fn peel_driver<F: FlagArray>(
             }
         }
         let comp = compact_edges(cur, pool, |e| !processed.get(e as usize));
+        if crate::validate::enabled() {
+            let mut rep = crate::validate::Report::new();
+            crate::validate::check_compaction(cur, &comp, |e| !processed.get(e as usize), &mut rep);
+            rep.panic_if_failed("pkt compaction");
+        }
         s = comp
             .old_of_new
             .iter()

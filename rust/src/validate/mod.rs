@@ -1,0 +1,206 @@
+//! Deep structural invariant checking for the decomposition pipeline.
+//!
+//! A silent data race or a broken rebuild in the peel corrupts truss
+//! numbers without failing fast; the output merely *looks* plausible.
+//! This module re-derives the invariants every stage depends on and
+//! reports precise paths to anything that does not hold:
+//!
+//! - [`check_graph`] — CSR well-formedness: monotone offsets, strictly
+//!   sorted rows (no duplicates), no self-loops, symmetry;
+//! - [`check_edge_graph`] — the truss representation of Fig. 2: `el`
+//!   strictly lexicographic with `u < v`, `eid` consistent with the
+//!   adjacency and a 2-regular cover of the id space, `eo` splitting
+//!   each row at its owner vertex;
+//! - [`check_compaction`] — the old↔new edge-id remap of an
+//!   active-graph rebuild is a strictly increasing bijection onto the
+//!   surviving edges and preserves endpoints;
+//! - [`check_support`] — a support array against a serial triangle
+//!   recount;
+//! - [`check_trussness`] — output sanity: trussness ≥ 2, bounded by
+//!   initial support + 2 and by the k-core bound
+//!   `min(core(u), core(v)) + 1`.
+//!
+//! Validation is opt-in (it adds serial re-derivation work): per job via
+//! `JobConfig::validate` / the `--validate` CLI flag / the server's
+//! `validate=true` option, or process-wide via `TRUSSX_VALIDATE=1`.
+//! While enabled, the PKT peel also validates every compaction rebuild
+//! in place. Each check runs under a `validate.*` obs span, and every
+//! violation increments the `validate_failures_total` counter.
+
+mod results;
+mod structure;
+
+pub use results::{check_support, check_trussness, recount_support};
+pub use structure::{check_compaction, check_edge_graph, check_graph};
+
+use crate::par::sync::atomic::{AtomicUsize, Ordering};
+
+/// Keep at most this many violations in a report; the rest only count
+/// (one corrupt array can otherwise flood thousands of identical lines).
+const MAX_STORED: usize = 32;
+
+/// One failed invariant: which check, where, and what was observed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    /// Check name, e.g. `csr.sorted` or `compaction.bijection`.
+    pub check: &'static str,
+    /// Path to the offending object, e.g. `graph.adj row u=17` or
+    /// `edge[42]=<3,9>`.
+    pub path: String,
+    /// Observed-vs-expected explanation.
+    pub detail: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}: {}", self.check, self.path, self.detail)
+    }
+}
+
+/// Accumulates the outcome of one validation pass.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// First [`MAX_STORED`] violations, in discovery order.
+    pub violations: Vec<Violation>,
+    /// Violations beyond the storage cap (still counted in the metric).
+    pub dropped: usize,
+    /// Top-level checks executed.
+    pub checks_run: usize,
+}
+
+impl Report {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a violation (also bumps `validate_failures_total`).
+    pub fn fail(&mut self, check: &'static str, path: String, detail: String) {
+        crate::obs::global().counter("validate_failures_total", &[]).inc();
+        if self.violations.len() < MAX_STORED {
+            self.violations.push(Violation { check, path, detail });
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty() && self.dropped == 0
+    }
+
+    /// All stored violations as one multi-line message, `None` if clean.
+    pub fn error(&self) -> Option<String> {
+        if self.ok() {
+            return None;
+        }
+        let mut lines: Vec<String> = self.violations.iter().map(|v| v.to_string()).collect();
+        if self.dropped > 0 {
+            lines.push(format!("... and {} more violations", self.dropped));
+        }
+        Some(lines.join("\n"))
+    }
+
+    /// Abort with the violation list — the in-peel hooks use this, where
+    /// returning an error is not an option.
+    pub fn panic_if_failed(&self, context: &str) {
+        if let Some(err) = self.error() {
+            panic!("validation failed in {context}:\n{err}");
+        }
+    }
+}
+
+/// Live [`ScopedEnable`] guards (process-wide, so the peel's compaction
+/// hook sees a job-level opt-in without threading config through it).
+static SCOPED: AtomicUsize = AtomicUsize::new(0);
+
+/// True if validation is on: a [`ScopedEnable`] guard is alive or the
+/// `TRUSSX_VALIDATE` environment variable is truthy.
+pub fn enabled() -> bool {
+    SCOPED.load(Ordering::Relaxed) > 0 || env_enabled()
+}
+
+/// `TRUSSX_VALIDATE` alone (ignores scoped guards).
+pub fn env_enabled() -> bool {
+    matches!(
+        std::env::var("TRUSSX_VALIDATE").ok().as_deref(),
+        Some("1" | "true" | "on" | "yes")
+    )
+}
+
+/// RAII guard turning validation on for its lifetime (nestable).
+pub struct ScopedEnable(());
+
+pub fn enable_scoped() -> ScopedEnable {
+    SCOPED.fetch_add(1, Ordering::Relaxed);
+    ScopedEnable(())
+}
+
+impl Drop for ScopedEnable {
+    fn drop(&mut self) {
+        SCOPED.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_collects_and_caps() {
+        let mut rep = Report::new();
+        assert!(rep.ok());
+        assert_eq!(rep.error(), None);
+        for i in 0..MAX_STORED + 5 {
+            rep.fail("test.check", format!("item[{i}]"), "boom".into());
+        }
+        assert!(!rep.ok());
+        assert_eq!(rep.violations.len(), MAX_STORED);
+        assert_eq!(rep.dropped, 5);
+        let err = rep.error().unwrap();
+        assert!(err.contains("[test.check] item[0]: boom"), "{err}");
+        assert!(err.contains("5 more violations"), "{err}");
+    }
+
+    #[test]
+    fn violation_display() {
+        let v = Violation {
+            check: "csr.sorted",
+            path: "graph.adj row u=3".into(),
+            detail: "neighbors 7 !< 7".into(),
+        };
+        assert_eq!(v.to_string(), "[csr.sorted] graph.adj row u=3: neighbors 7 !< 7");
+    }
+
+    #[test]
+    fn scoped_enable_nests() {
+        // no env var in the test environment; rely on guards only
+        if env_enabled() {
+            return;
+        }
+        assert!(!enabled());
+        let g1 = enable_scoped();
+        assert!(enabled());
+        let g2 = enable_scoped();
+        drop(g1);
+        assert!(enabled(), "still one guard alive");
+        drop(g2);
+        assert!(!enabled());
+    }
+
+    #[test]
+    #[should_panic(expected = "validation failed in unit-test")]
+    fn panic_if_failed_panics() {
+        let mut rep = Report::new();
+        rep.fail("x.y", "z".into(), "bad".into());
+        rep.panic_if_failed("unit-test");
+    }
+
+    #[test]
+    fn failures_metric_increments() {
+        let c = crate::obs::global().counter("validate_failures_total", &[]);
+        let before = c.get();
+        let mut rep = Report::new();
+        rep.fail("metric.check", "p".into(), "d".into());
+        rep.fail("metric.check", "q".into(), "d".into());
+        assert!(c.get() >= before + 2);
+    }
+}

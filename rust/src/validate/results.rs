@@ -1,0 +1,160 @@
+//! Result checks: support arrays against a serial triangle recount, and
+//! trussness output against its analytic bounds.
+
+use super::Report;
+use crate::graph::EdgeGraph;
+use crate::obs;
+
+/// Serial per-edge triangle recount (the oracle the parallel AM4 path is
+/// checked against). Thin alias so callers and mutation tests name the
+/// intent rather than the implementation.
+pub fn recount_support(eg: &EdgeGraph) -> Vec<u32> {
+    crate::triangle::support_naive(eg)
+}
+
+/// Compare a support array against a freshly recounted one.
+pub fn check_support(eg: &EdgeGraph, support: &[u32], rep: &mut Report) {
+    let _sp = obs::span("validate.support");
+    rep.checks_run += 1;
+    if support.len() != eg.m() {
+        rep.fail(
+            "support.length",
+            "support".into(),
+            format!("length {} != m = {}", support.len(), eg.m()),
+        );
+        return;
+    }
+    let fresh = recount_support(eg);
+    for (e, (&got, &want)) in support.iter().zip(&fresh).enumerate() {
+        if got != want {
+            let (u, v) = eg.el[e];
+            rep.fail(
+                "support.recount",
+                format!("edge[{e}]=<{u},{v}>"),
+                format!("support {got} != recounted triangle count {want}"),
+            );
+        }
+    }
+}
+
+/// Trussness output sanity against the decomposition's analytic bounds:
+///
+/// - floor: every edge belongs to its own 2-truss, so `t(e) ≥ 2`;
+/// - support bound: peeling only lowers support, so
+///   `t(e) ≤ sup(e) + 2` with `sup` the *initial* triangle count;
+/// - k-core bound: every vertex of a k-truss lies in a (k−1)-core, so
+///   `t(e) ≤ min(core(u), core(v)) + 1`.
+///
+/// These are one-sided (monotone) bounds, not a full definition check —
+/// the `truss::verify_definition` oracle stays a test-only tool because
+/// its `O(t_max · m^1.5)` cost is unfit for a production flag.
+pub fn check_trussness(eg: &EdgeGraph, trussness: &[u32], rep: &mut Report) {
+    let _sp = obs::span("validate.trussness");
+    rep.checks_run += 1;
+    if trussness.len() != eg.m() {
+        rep.fail(
+            "truss.length",
+            "trussness".into(),
+            format!("length {} != m = {}", trussness.len(), eg.m()),
+        );
+        return;
+    }
+    if eg.m() == 0 {
+        return;
+    }
+    let sup = recount_support(eg);
+    let core = crate::kcore::bz(&eg.g);
+    for (e, &t) in trussness.iter().enumerate() {
+        let (u, v) = eg.el[e];
+        let path = || format!("edge[{e}]=<{u},{v}>");
+        if t < 2 {
+            rep.fail("truss.floor", path(), format!("trussness {t} < 2"));
+            continue;
+        }
+        if u64::from(t) > u64::from(sup[e]) + 2 {
+            rep.fail(
+                "truss.support_bound",
+                path(),
+                format!("trussness {t} > initial support {} + 2", sup[e]),
+            );
+        }
+        let cb = core[u as usize].min(core[v as usize]) + 1;
+        if t > cb {
+            rep.fail(
+                "truss.kcore_bound",
+                path(),
+                format!("trussness {t} > min(core({u}), core({v})) + 1 = {cb}"),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::par::Pool;
+    use crate::triangle;
+    use crate::truss;
+
+    #[test]
+    fn clean_pipeline_passes_all_checks() {
+        let eg = EdgeGraph::new(gen::planted_partition(3, 10, 0.8, 0.05, 7));
+        let pool = Pool::new(2);
+        let mut rep = Report::new();
+        super::super::check_graph(&eg.g, &mut rep);
+        super::super::check_edge_graph(&eg, &mut rep);
+        let s = triangle::into_plain(triangle::support_am4(&eg, &pool));
+        check_support(&eg, &s, &mut rep);
+        let res = truss::pkt(&eg, &pool);
+        check_trussness(&eg, &res.trussness, &mut rep);
+        assert!(rep.ok(), "{:?}", rep.violations);
+        assert_eq!(rep.checks_run, 4);
+    }
+
+    #[test]
+    fn empty_graph_passes() {
+        let eg = EdgeGraph::new(crate::graph::GraphBuilder::new().build());
+        let mut rep = Report::new();
+        super::super::check_graph(&eg.g, &mut rep);
+        super::super::check_edge_graph(&eg, &mut rep);
+        check_support(&eg, &[], &mut rep);
+        check_trussness(&eg, &[], &mut rep);
+        assert!(rep.ok(), "{:?}", rep.violations);
+    }
+
+    #[test]
+    fn support_length_mismatch_reported() {
+        let eg = EdgeGraph::new(gen::complete(4));
+        let mut rep = Report::new();
+        check_support(&eg, &[0, 0], &mut rep);
+        assert_eq!(rep.violations.len(), 1);
+        assert_eq!(rep.violations[0].check, "support.length");
+    }
+
+    #[test]
+    fn kcore_bound_catches_inflated_trussness() {
+        // K5 plus a pendant: claim trussness 5 on the pendant edge —
+        // its tail vertex has coreness 1, so the bound must fire
+        let mut edges = vec![];
+        for u in 0..5u32 {
+            for v in (u + 1)..5 {
+                edges.push((u, v));
+            }
+        }
+        edges.push((4, 5));
+        let g = crate::graph::GraphBuilder::new().edges_vec(edges).build();
+        let eg = EdgeGraph::new(g);
+        let pool = Pool::new(1);
+        let mut t = truss::pkt(&eg, &pool).trussness;
+        let tail = eg.edge_id(4, 5).unwrap() as usize;
+        t[tail] = 5;
+        let mut rep = Report::new();
+        check_trussness(&eg, &t, &mut rep);
+        assert!(rep.violations.iter().any(|v| v.check == "truss.kcore_bound"), "{rep:?}");
+        assert!(
+            rep.violations.iter().any(|v| v.path.contains("<4,5>")),
+            "path names the edge: {rep:?}"
+        );
+    }
+}

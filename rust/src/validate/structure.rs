@@ -1,0 +1,259 @@
+//! Structural checks: CSR storage, the edge representation, and the
+//! compaction remap.
+//!
+//! Unlike the `panic!`-on-corruption `Graph::validate` /
+//! `EdgeGraph::validate` debug helpers, everything here is bounds-guarded
+//! and *reports* through a [`Report`] — corrupt data must produce a
+//! precise path, never a secondary panic. Checks return early once a
+//! structural premise breaks (e.g. offset arrays of the wrong length)
+//! because later invariants are meaningless on top of it.
+
+use super::Report;
+use crate::graph::{EdgeCompaction, EdgeGraph, EdgeId, Graph, Vertex};
+use crate::obs;
+
+/// CSR well-formedness: offset monotonicity, neighbor range, strictly
+/// sorted rows (which also excludes duplicates), no self-loops, and
+/// undirected symmetry.
+pub fn check_graph(g: &Graph, rep: &mut Report) {
+    let _sp = obs::span("validate.graph");
+    rep.checks_run += 1;
+    let n = g.n();
+    if g.xadj.len() != n + 1 {
+        rep.fail(
+            "csr.offsets",
+            "graph.xadj".into(),
+            format!("length {} != n+1 = {}", g.xadj.len(), n + 1),
+        );
+        return;
+    }
+    if g.xadj[0] != 0 {
+        rep.fail("csr.offsets", "graph.xadj[0]".into(), format!("{} != 0", g.xadj[0]));
+        return;
+    }
+    for u in 0..n {
+        if g.xadj[u] > g.xadj[u + 1] {
+            rep.fail(
+                "csr.offsets",
+                format!("graph.xadj[{u}]"),
+                format!("offsets decrease: {} > {}", g.xadj[u], g.xadj[u + 1]),
+            );
+            return;
+        }
+    }
+    if g.xadj[n] != g.adj.len() {
+        rep.fail(
+            "csr.offsets",
+            format!("graph.xadj[{n}]"),
+            format!("{} != adj length {}", g.xadj[n], g.adj.len()),
+        );
+        return;
+    }
+    for u in 0..n {
+        let row = &g.adj[g.xadj[u]..g.xadj[u + 1]];
+        for (k, &v) in row.iter().enumerate() {
+            if (v as usize) >= n {
+                rep.fail(
+                    "csr.range",
+                    format!("graph.adj[{}] (row u={u})", g.xadj[u] + k),
+                    format!("neighbor {v} >= n = {n}"),
+                );
+                return;
+            }
+            if v as usize == u {
+                rep.fail(
+                    "csr.selfloop",
+                    format!("graph.adj[{}] (row u={u})", g.xadj[u] + k),
+                    format!("self-loop on vertex {u}"),
+                );
+            }
+        }
+        for (k, w) in row.windows(2).enumerate() {
+            if w[0] >= w[1] {
+                rep.fail(
+                    "csr.sorted",
+                    format!("graph.adj row u={u} (positions {k},{})", k + 1),
+                    format!("neighbors {} !< {}", w[0], w[1]),
+                );
+                break; // one report per row; the rest is noise
+            }
+        }
+    }
+    // symmetry: every arc (u, v) needs its reverse (v, u). Rows are
+    // checked sorted above, so binary search is valid on clean rows; on
+    // an unsorted row it may misreport, but the report is already red.
+    for u in 0..n {
+        for &v in g.neighbors(u as Vertex) {
+            if g.neighbors(v).binary_search(&(u as Vertex)).is_err() {
+                rep.fail(
+                    "csr.symmetry",
+                    format!("arc ({u},{v})"),
+                    format!("reverse arc ({v},{u}) missing"),
+                );
+            }
+        }
+    }
+}
+
+/// Edge-representation invariants (the paper's Fig. 2 structure): `el`
+/// strictly lexicographic with `u < v`, `eid` consistent with adjacency
+/// and covering every id exactly twice, `eo` splitting each row at the
+/// owner vertex.
+pub fn check_edge_graph(eg: &EdgeGraph, rep: &mut Report) {
+    let _sp = obs::span("validate.edge_graph");
+    rep.checks_run += 1;
+    let n = eg.n();
+    let m = eg.m();
+    if eg.el.len() != m || eg.eid.len() != eg.g.adj.len() || eg.eo.len() != n {
+        rep.fail(
+            "edge.lengths",
+            "edge_graph".into(),
+            format!(
+                "el/eid/eo lengths ({}, {}, {}) inconsistent with (m={}, 2m={}, n={})",
+                eg.el.len(),
+                eg.eid.len(),
+                eg.eo.len(),
+                m,
+                eg.g.adj.len(),
+                n
+            ),
+        );
+        return;
+    }
+    for (e, &(u, v)) in eg.el.iter().enumerate() {
+        if u >= v || (v as usize) >= n {
+            rep.fail(
+                "edge.canonical",
+                format!("el[{e}]=<{u},{v}>"),
+                "endpoints must satisfy u < v < n".into(),
+            );
+        }
+    }
+    for (e, w) in eg.el.windows(2).enumerate() {
+        if w[0] >= w[1] {
+            rep.fail(
+                "edge.lex_order",
+                format!("el[{e}]..el[{}]", e + 1),
+                format!("<{},{}> !< <{},{}>", w[0].0, w[0].1, w[1].0, w[1].1),
+            );
+        }
+    }
+    // eid ↔ adjacency consistency and 2-regular id cover
+    let mut seen = vec![0u32; m];
+    for u in 0..n {
+        let (lo, hi) = (eg.g.xadj[u], eg.g.xadj[u + 1]);
+        if eg.eo[u] < lo || eg.eo[u] > hi {
+            rep.fail(
+                "edge.eo_range",
+                format!("eo[{u}]"),
+                format!("{} outside row bounds [{lo}, {hi}]", eg.eo[u]),
+            );
+            continue;
+        }
+        for j in lo..hi {
+            let v = eg.g.adj[j];
+            let e = eg.eid[j] as usize;
+            if e >= m {
+                rep.fail(
+                    "edge.eid_range",
+                    format!("eid[{j}] (row u={u})"),
+                    format!("edge id {e} >= m = {m}"),
+                );
+                continue;
+            }
+            seen[e] += 1;
+            let canon = if (u as Vertex) < v { (u as Vertex, v) } else { (v, u as Vertex) };
+            if eg.el[e] != canon {
+                rep.fail(
+                    "edge.eid_endpoints",
+                    format!("eid[{j}] (row u={u})"),
+                    format!("id {e} maps to el={:?}, expected <{},{}>", eg.el[e], canon.0, canon.1),
+                );
+            }
+            let is_lower = j < eg.eo[u];
+            if is_lower != ((v as usize) < u) {
+                rep.fail(
+                    "edge.eo_split",
+                    format!("adj[{j}] (row u={u})"),
+                    format!("neighbor {v} on the wrong side of eo[{u}]={}", eg.eo[u]),
+                );
+            }
+        }
+    }
+    for (e, &c) in seen.iter().enumerate() {
+        if c != 2 {
+            let (u, v) = eg.el[e];
+            rep.fail(
+                "edge.eid_cover",
+                format!("edge[{e}]=<{u},{v}>"),
+                format!("id appears {c} times in eid, expected 2"),
+            );
+        }
+    }
+}
+
+/// Compaction-remap invariants: `old_of_new` is a strictly increasing
+/// enumeration of exactly the edges `alive` accepts (a bijection onto
+/// the survivors), endpoints are preserved, and the rebuilt sub-graph is
+/// itself a well-formed [`EdgeGraph`].
+pub fn check_compaction<F>(old: &EdgeGraph, comp: &EdgeCompaction, alive: F, rep: &mut Report)
+where
+    F: Fn(EdgeId) -> bool,
+{
+    let _sp = obs::span("validate.compaction");
+    rep.checks_run += 1;
+    let old_m = old.m();
+    if comp.eg.m() != comp.old_of_new.len() {
+        rep.fail(
+            "compaction.lengths",
+            "old_of_new".into(),
+            format!("new graph has m={} but map has {}", comp.eg.m(), comp.old_of_new.len()),
+        );
+        return;
+    }
+    for (i, w) in comp.old_of_new.windows(2).enumerate() {
+        if w[0] >= w[1] {
+            rep.fail(
+                "compaction.monotone",
+                format!("old_of_new[{i}..={}]", i + 1),
+                format!("{} !< {} (lex order of ids breaks the ownership rule)", w[0], w[1]),
+            );
+        }
+    }
+    let mut mapped = vec![false; old_m];
+    for (new, &o) in comp.old_of_new.iter().enumerate() {
+        if (o as usize) >= old_m {
+            rep.fail(
+                "compaction.range",
+                format!("old_of_new[{new}]"),
+                format!("old id {o} >= old m = {old_m}"),
+            );
+            continue;
+        }
+        mapped[o as usize] = true;
+        if comp.eg.el[new] != old.el[o as usize] {
+            rep.fail(
+                "compaction.endpoints",
+                format!("old_of_new[{new}]={o}"),
+                format!("endpoints {:?} != old {:?}", comp.eg.el[new], old.el[o as usize]),
+            );
+        }
+    }
+    // bijection onto the survivors: alive ⇔ mapped, both directions
+    for e in 0..old_m {
+        let a = alive(e as EdgeId);
+        if a != mapped[e] {
+            let (u, v) = old.el[e];
+            rep.fail(
+                "compaction.bijection",
+                format!("edge[{e}]=<{u},{v}>"),
+                if a {
+                    "alive edge missing from the compacted graph".into()
+                } else {
+                    "dead edge resurrected in the compacted graph".into()
+                },
+            );
+        }
+    }
+    check_edge_graph(&comp.eg, rep);
+}

@@ -1,0 +1,124 @@
+//! Mutation tests for the `validate` layer: deliberately corrupt each
+//! data structure the way a real concurrency bug would (a lost support
+//! decrement, a broken compaction remap, an unsorted rebuild, an
+//! inflated truss number) and assert the validator catches it with a
+//! path precise enough to debug from.
+
+use trussx::graph::{compact_edges, EdgeGraph};
+use trussx::par::Pool;
+use trussx::validate::{
+    check_compaction, check_graph, check_support, check_trussness, recount_support, Report,
+};
+use trussx::{gen, truss};
+
+fn sample_eg() -> EdgeGraph {
+    EdgeGraph::new(gen::planted_partition(3, 8, 0.9, 0.05, 11))
+}
+
+#[test]
+fn flipped_support_count_is_caught() {
+    let eg = sample_eg();
+    let mut s = recount_support(&eg);
+    // a racing decrement that hit the wrong edge: off by one, one slot
+    let victim = s.len() / 2;
+    s[victim] += 1;
+    let mut rep = Report::new();
+    check_support(&eg, &s, &mut rep);
+    assert!(!rep.ok());
+    let v = &rep.violations[0];
+    assert_eq!(v.check, "support.recount");
+    let (u, vtx) = eg.el[victim];
+    assert!(
+        v.path.contains(&format!("<{u},{vtx}>")),
+        "path names the corrupt edge: {v}"
+    );
+}
+
+#[test]
+fn broken_compaction_bijectivity_is_caught() {
+    let eg = sample_eg();
+    let pool = Pool::new(2);
+    // keep roughly half the edges alive, as a peel stage would
+    let alive = |e: u32| e % 2 == 0;
+    let mut comp = compact_edges(&eg, &pool, alive);
+    let mut rep = Report::new();
+    check_compaction(&eg, &comp, alive, &mut rep);
+    assert!(rep.ok(), "clean compaction must pass: {:?}", rep.violations);
+
+    // duplicate one map entry: an alive edge vanishes and another is
+    // mapped twice — exactly what a racy rebuild cursor produces
+    let lost_old = comp.old_of_new[1] as usize;
+    comp.old_of_new[1] = comp.old_of_new[0];
+    let mut rep = Report::new();
+    check_compaction(&eg, &comp, alive, &mut rep);
+    assert!(!rep.ok());
+    assert!(
+        rep.violations.iter().any(|v| v.check == "compaction.bijection"),
+        "{:?}",
+        rep.violations
+    );
+    assert!(
+        rep.violations.iter().any(|v| v.check == "compaction.monotone"),
+        "{:?}",
+        rep.violations
+    );
+    let (u, v) = eg.el[lost_old];
+    assert!(
+        rep.violations
+            .iter()
+            .any(|x| x.check == "compaction.bijection" && x.path.contains(&format!("<{u},{v}>"))),
+        "path names the lost edge: {:?}",
+        rep.violations
+    );
+}
+
+#[test]
+fn unsorted_adjacency_row_is_caught() {
+    let mut g = gen::complete(5);
+    // row 0 is [1,2,3,4]; swap the first two entries
+    g.adj.swap(0, 1);
+    let mut rep = Report::new();
+    check_graph(&g, &mut rep);
+    assert!(!rep.ok());
+    let v = rep
+        .violations
+        .iter()
+        .find(|v| v.check == "csr.sorted")
+        .expect("csr.sorted fires");
+    assert!(v.path.contains("u=0"), "path names the row: {v}");
+}
+
+#[test]
+fn inflated_trussness_is_caught() {
+    let eg = sample_eg();
+    let pool = Pool::new(2);
+    let mut t = truss::pkt(&eg, &pool).trussness;
+    let mut rep = Report::new();
+    check_trussness(&eg, &t, &mut rep);
+    assert!(rep.ok(), "real output must pass: {:?}", rep.violations);
+    // claim a trussness above every analytic bound
+    t[0] = u32::try_from(eg.n()).unwrap() + 10;
+    let mut rep = Report::new();
+    check_trussness(&eg, &t, &mut rep);
+    assert!(!rep.ok());
+    assert!(
+        rep.violations
+            .iter()
+            .any(|v| v.check == "truss.support_bound" || v.check == "truss.kcore_bound"),
+        "{:?}",
+        rep.violations
+    );
+}
+
+#[test]
+fn corruption_increments_failure_metric() {
+    let c = trussx::obs::global().counter("validate_failures_total", &[]);
+    let before = c.get();
+    let eg = sample_eg();
+    let mut s = recount_support(&eg);
+    s[0] ^= 1;
+    let mut rep = Report::new();
+    check_support(&eg, &s, &mut rep);
+    assert!(!rep.ok());
+    assert!(c.get() > before, "validate_failures_total must move");
+}
