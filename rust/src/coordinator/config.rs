@@ -190,6 +190,11 @@ pub struct JobConfig {
     /// [`crate::validate`]); also enabled process-wide by
     /// `TRUSSX_VALIDATE=1`.
     pub validate: bool,
+    /// Per-job deadline in seconds (`timeout=` protocol option,
+    /// `--job-timeout` on the CLI). `None` = no deadline. The executor
+    /// arms a [`crate::par::CancelToken`] with it; the job stops at the
+    /// next level/chunk boundary once it expires.
+    pub timeout: Option<f64>,
 }
 
 impl JobConfig {
@@ -201,6 +206,7 @@ impl JobConfig {
             threads: crate::par::Pool::default_threads(),
             pkt: crate::truss::PktConfig::default(),
             validate: false,
+            timeout: None,
         }
     }
 
@@ -226,6 +232,11 @@ impl JobConfig {
 
     pub fn validate(mut self, v: bool) -> Self {
         self.validate = v;
+        self
+    }
+
+    pub fn timeout(mut self, secs: f64) -> Self {
+        self.timeout = Some(secs);
         self
     }
 }
@@ -280,5 +291,12 @@ mod tests {
         assert_eq!(j.threads, 2);
         assert!(!j.validate, "validation is opt-in");
         assert!(j.validate(true).validate);
+    }
+
+    #[test]
+    fn job_timeout_defaults_off() {
+        let j = JobConfig::new(GraphSpec::Complete { n: 4 });
+        assert!(j.timeout.is_none(), "deadlines are opt-in");
+        assert_eq!(j.timeout(0.25).timeout, Some(0.25));
     }
 }

@@ -1,0 +1,623 @@
+//! Bounded job executor: admission control, deadlines, cancellation,
+//! graceful drain.
+//!
+//! The server used to spawn one decomposition per request with no
+//! ceiling — N slow clients meant N concurrent peels fighting over the
+//! same cores. This module replaces that with a fixed worker pool in
+//! front of a bounded queue:
+//!
+//! - [`Executor::submit`] is **non-blocking** admission: a full queue
+//!   returns [`SubmitError::Busy`] with a load-derived `retry_after_ms`
+//!   hint instead of stacking threads;
+//! - every job gets a [`CancelToken`]; a per-job `timeout=` (or the
+//!   executor-wide default) arms a deadline the decomposition polls at
+//!   its level/chunk boundaries;
+//! - worker panics are caught and isolated ([`std::panic::catch_unwind`])
+//!   — the client sees `ERR internal ...`, the worker keeps serving;
+//! - [`Executor::shutdown`] stops admissions, waits for in-flight and
+//!   queued jobs up to a drain deadline, then cancels stragglers via
+//!   their tokens and joins the pool.
+//!
+//! In-flight accounting is RAII ([`InflightGuard`]) so the counter and
+//! its gauge can't leak on any exit path, and the gauges are derived
+//! from an atomic load *after* the RMW — publishing `fetch_add(..) + 1`
+//! arithmetic is racy under concurrent updates.
+//!
+//! Fault injection for tests: `TRUSSX_FAULT=<point>:<delay_ms|panic|err>`
+//! (or [`ExecutorConfig::fault`] directly, which avoids env races in
+//! parallel tests) fires at named points; the only point today is
+//! `job.start`, hit by every worker just before the pipeline runs.
+
+use super::config::JobConfig;
+use super::pipeline::{run_job_with, JobReport};
+use crate::obs;
+use crate::par::sync::atomic::{AtomicU64, Ordering};
+use crate::par::{CancelReason, CancelToken, Cancelled};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// What an injected fault does when its point is hit.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Sleep this long (in small slices, honoring the job's token).
+    Delay(Duration),
+    /// Panic — exercises the worker's panic isolation.
+    Panic,
+    /// Return an error from the job.
+    Err,
+}
+
+/// A parsed `TRUSSX_FAULT=<point>:<delay_ms|panic|err>` spec.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub point: String,
+    pub action: FaultAction,
+}
+
+impl FaultSpec {
+    /// Parse `point:action` where action is a delay in ms, `panic`, or
+    /// `err`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (point, action) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow!("bad fault spec '{s}' (want point:delay_ms|panic|err)"))?;
+        if point.is_empty() {
+            bail!("bad fault spec '{s}': empty point");
+        }
+        let action = match action {
+            "panic" => FaultAction::Panic,
+            "err" => FaultAction::Err,
+            ms => FaultAction::Delay(Duration::from_millis(
+                ms.parse().map_err(|_| anyhow!("bad fault delay '{ms}' (want ms|panic|err)"))?,
+            )),
+        };
+        Ok(Self { point: point.to_string(), action })
+    }
+
+    /// Read `TRUSSX_FAULT` from the environment; a malformed spec is
+    /// reported and ignored rather than silently arming nothing-like.
+    pub fn from_env() -> Option<Self> {
+        let spec = std::env::var("TRUSSX_FAULT").ok()?;
+        match Self::parse(&spec) {
+            Ok(f) => Some(f),
+            Err(e) => {
+                eprintln!("ignoring TRUSSX_FAULT: {e:#}");
+                None
+            }
+        }
+    }
+
+    /// Fire if `point` matches. Delays sleep in ≤5ms slices so a cancel
+    /// or deadline interrupts the fault promptly.
+    fn fire(&self, point: &str, token: &CancelToken) -> Result<()> {
+        if self.point != point {
+            return Ok(());
+        }
+        match &self.action {
+            FaultAction::Delay(d) => {
+                let until = Instant::now() + *d;
+                loop {
+                    if token.should_stop().is_some() {
+                        return Err(token.stopped("fault.delay", format!("at {point}")).into());
+                    }
+                    let now = Instant::now();
+                    if now >= until {
+                        return Ok(());
+                    }
+                    std::thread::sleep((until - now).min(Duration::from_millis(5)));
+                }
+            }
+            FaultAction::Panic => panic!("injected fault at {point}"),
+            FaultAction::Err => bail!("injected fault at {point}"),
+        }
+    }
+}
+
+/// Executor sizing and policy.
+#[derive(Clone, Debug)]
+pub struct ExecutorConfig {
+    /// Worker threads (concurrent jobs). Each job still parallelizes
+    /// internally through its own [`crate::par::Pool`].
+    pub workers: usize,
+    /// Bounded queue depth; a full queue rejects with `ERR BUSY`.
+    pub queue_depth: usize,
+    /// Default per-job deadline; a job's own `timeout=` overrides it.
+    pub job_timeout: Option<Duration>,
+    /// Fault injection point (tests); defaults from `TRUSSX_FAULT`.
+    pub fault: Option<FaultSpec>,
+}
+
+impl Default for ExecutorConfig {
+    fn default() -> Self {
+        Self { workers: 2, queue_depth: 16, job_timeout: None, fault: FaultSpec::from_env() }
+    }
+}
+
+/// Why [`Executor::submit`] refused a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The queue is full; retry after roughly this many milliseconds
+    /// (average job time × queue occupancy / workers).
+    Busy { retry_after_ms: u64 },
+    /// [`Executor::shutdown`] has begun; no new jobs.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Busy { retry_after_ms } => {
+                write!(f, "BUSY retry_after_ms={retry_after_ms}")
+            }
+            Self::ShuttingDown => write!(f, "SHUTDOWN draining"),
+        }
+    }
+}
+
+struct Job {
+    id: u64,
+    cfg: JobConfig,
+    token: CancelToken,
+    reply: std::sync::mpsc::Sender<Result<JobReport>>,
+}
+
+struct ExecShared {
+    inflight: AtomicU64,
+    queued: AtomicU64,
+    /// Tokens of all admitted-but-unfinished jobs (queued included), so
+    /// a drain-deadline cancel reaches jobs that never started.
+    active: Mutex<HashMap<u64, CancelToken>>,
+    /// EWMA of successful job wall time, feeding `retry_after_ms`.
+    avg_job_ms: AtomicU64,
+    workers: u64,
+    fault: Option<FaultSpec>,
+}
+
+struct ExecMetrics {
+    rejected: obs::Counter,
+    timeouts: obs::Counter,
+    cancelled: obs::Counter,
+    inflight_gauge: obs::Gauge,
+    queue_gauge: obs::Gauge,
+}
+
+fn exec_metrics() -> ExecMetrics {
+    let r = obs::global();
+    ExecMetrics {
+        rejected: r.counter("server_rejected_total", &[]),
+        timeouts: r.counter("server_timeouts_total", &[]),
+        cancelled: r.counter("server_cancelled_total", &[]),
+        inflight_gauge: r.gauge("server_inflight_jobs", &[]),
+        queue_gauge: r.gauge("server_queue_depth", &[]),
+    }
+}
+
+/// RAII in-flight accounting: increment on entry, decrement on *any*
+/// exit — including a panic unwinding through the job body. The old
+/// inline bookkeeping leaked the counter (and wedged the gauge) when
+/// `run_job` panicked.
+struct InflightGuard<'a> {
+    shared: &'a ExecShared,
+    gauge: obs::Gauge,
+}
+
+impl<'a> InflightGuard<'a> {
+    fn enter(shared: &'a ExecShared, gauge: obs::Gauge) -> Self {
+        shared.inflight.fetch_add(1, Ordering::Relaxed);
+        // the gauge mirrors the counter via a load *after* the RMW;
+        // publishing `fetch_add(..) + 1` arithmetic instead can expose
+        // stale values when two workers race the set
+        gauge.set(shared.inflight.load(Ordering::Relaxed) as f64);
+        Self { shared, gauge }
+    }
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.shared.inflight.fetch_sub(1, Ordering::Relaxed);
+        self.gauge.set(self.shared.inflight.load(Ordering::Relaxed) as f64);
+    }
+}
+
+/// Fixed worker pool with bounded admission. See the module docs.
+pub struct Executor {
+    /// `None` once shutdown begins: dropping the sender is what lets
+    /// workers drain the queue and exit.
+    tx: Mutex<Option<SyncSender<Job>>>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    shared: Arc<ExecShared>,
+    next_id: AtomicU64,
+    job_timeout: Option<Duration>,
+}
+
+/// A submitted job: [`JobTicket::wait`] blocks for the reply,
+/// [`JobTicket::cancel`] asks the job to stop at its next boundary.
+pub struct JobTicket {
+    rx: std::sync::mpsc::Receiver<Result<JobReport>>,
+    token: CancelToken,
+    pub id: u64,
+}
+
+impl JobTicket {
+    pub fn wait(self) -> Result<JobReport> {
+        match self.rx.recv() {
+            Ok(res) => res,
+            Err(_) => Err(anyhow!("internal: worker dropped the job reply")),
+        }
+    }
+
+    pub fn cancel(&self) {
+        self.token.cancel();
+    }
+}
+
+impl Executor {
+    pub fn new(cfg: &ExecutorConfig) -> Self {
+        let workers = cfg.workers.max(1);
+        let (tx, rx) = sync_channel::<Job>(cfg.queue_depth.max(1));
+        // the receiver is shared; the lock serializes only job *pickup*
+        // (a recv), never execution
+        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(ExecShared {
+            inflight: AtomicU64::new(0),
+            queued: AtomicU64::new(0),
+            active: Mutex::new(HashMap::new()),
+            avg_job_ms: AtomicU64::new(50),
+            workers: workers as u64,
+            fault: cfg.fault.clone(),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let rx = rx.clone();
+            let sh = shared.clone();
+            // SPAWN: fixed pool sized by ExecutorConfig::workers,
+            // joined in shutdown(); exits when the channel disconnects.
+            let builder = std::thread::Builder::new().name(format!("trussx-worker-{i}"));
+            match builder.spawn(move || worker_loop(&rx, &sh)) {
+                Ok(h) => handles.push(h),
+                Err(e) => panic!("spawning executor worker {i}: {e}"),
+            }
+        }
+        Self {
+            tx: Mutex::new(Some(tx)),
+            handles: Mutex::new(handles),
+            shared,
+            next_id: AtomicU64::new(1),
+            job_timeout: cfg.job_timeout,
+        }
+    }
+
+    /// Non-blocking admission. `Ok` means the job is queued and WILL be
+    /// answered through the ticket (success, error, or cancellation).
+    pub fn submit(&self, cfg: JobConfig) -> Result<JobTicket, SubmitError> {
+        // sanitize before Duration::from_secs_f64, which panics on
+        // negative/NaN/huge input; the protocol layer validates too but
+        // the executor must not trust its callers that far
+        let timeout = cfg
+            .timeout
+            .filter(|t| t.is_finite() && *t >= 0.0)
+            .map(|t| Duration::from_secs_f64(t.min(31_536_000.0)))
+            .or(self.job_timeout);
+        let token = CancelToken::with_timeout(timeout);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let job = Job { id, cfg, token: token.clone(), reply: reply_tx };
+        let m = exec_metrics();
+
+        // register the token before enqueueing so a drain-time
+        // cancel-all covers jobs that are still queued
+        if let Ok(mut map) = self.shared.active.lock() {
+            map.insert(id, token.clone());
+        }
+        // count the job as queued BEFORE try_send: the worker's
+        // decrement must never run before our increment or the counter
+        // underflows
+        self.shared.queued.fetch_add(1, Ordering::Relaxed);
+        let sent = match self.tx.lock() {
+            Ok(guard) => match guard.as_ref() {
+                None => Err(SubmitError::ShuttingDown),
+                Some(tx) => match tx.try_send(job) {
+                    Ok(()) => Ok(()),
+                    Err(TrySendError::Full(_)) => {
+                        Err(SubmitError::Busy { retry_after_ms: self.retry_hint() })
+                    }
+                    Err(TrySendError::Disconnected(_)) => Err(SubmitError::ShuttingDown),
+                },
+            },
+            Err(_) => Err(SubmitError::ShuttingDown),
+        };
+        match sent {
+            Ok(()) => {
+                m.queue_gauge.set(self.shared.queued.load(Ordering::Relaxed) as f64);
+                Ok(JobTicket { rx: reply_rx, token, id })
+            }
+            Err(e) => {
+                self.shared.queued.fetch_sub(1, Ordering::Relaxed);
+                m.queue_gauge.set(self.shared.queued.load(Ordering::Relaxed) as f64);
+                if let Ok(mut map) = self.shared.active.lock() {
+                    map.remove(&id);
+                }
+                if matches!(e, SubmitError::Busy { .. }) {
+                    m.rejected.inc();
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Load-derived backoff hint: average job time × jobs ahead of you,
+    /// spread over the pool, clamped to something a client can act on.
+    fn retry_hint(&self) -> u64 {
+        let avg = self.shared.avg_job_ms.load(Ordering::Relaxed).max(1);
+        let waiting = self.shared.queued.load(Ordering::Relaxed).max(1);
+        (avg.saturating_mul(waiting) / self.shared.workers.max(1)).clamp(10, 5000)
+    }
+
+    pub fn inflight(&self) -> u64 {
+        self.shared.inflight.load(Ordering::Relaxed)
+    }
+
+    pub fn queued(&self) -> u64 {
+        self.shared.queued.load(Ordering::Relaxed)
+    }
+
+    /// Graceful drain: stop admissions, wait for in-flight + queued
+    /// jobs up to `drain`, then cancel stragglers through their tokens
+    /// and join the pool. Idempotent.
+    pub fn shutdown(&self, drain: Duration) {
+        // dropping the sender closes the channel: workers finish the
+        // queued backlog, then exit on disconnect
+        if let Ok(mut tx) = self.tx.lock() {
+            tx.take();
+        }
+        let deadline = Instant::now() + drain;
+        loop {
+            let busy = self.shared.inflight.load(Ordering::Relaxed)
+                + self.shared.queued.load(Ordering::Relaxed);
+            if busy == 0 || Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // past the drain deadline (or already idle): cancel whatever is
+        // left — running jobs stop at their next boundary, queued jobs
+        // stop at their first
+        if let Ok(map) = self.shared.active.lock() {
+            for token in map.values() {
+                token.cancel();
+            }
+        }
+        if let Ok(mut hs) = self.handles.lock() {
+            for h in hs.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Job>>, shared: &ExecShared) {
+    loop {
+        let job = {
+            let Ok(guard) = rx.lock() else { return };
+            match guard.recv() {
+                Ok(j) => j,
+                // queue empty and sender dropped: shutdown
+                Err(_) => return,
+            }
+        };
+        run_one(job, shared);
+    }
+}
+
+fn run_one(job: Job, shared: &ExecShared) {
+    let Job { id, cfg, token, reply } = job;
+    let m = exec_metrics();
+    // inflight up BEFORE queued down, so `inflight + queued` (the drain
+    // condition) never dips to zero while this job is between states
+    let guard = InflightGuard::enter(shared, m.inflight_gauge.clone());
+    shared.queued.fetch_sub(1, Ordering::Relaxed);
+    m.queue_gauge.set(shared.queued.load(Ordering::Relaxed) as f64);
+
+    let t0 = Instant::now();
+    let caught = catch_unwind(AssertUnwindSafe(|| {
+        if let Some(f) = &shared.fault {
+            f.fire("job.start", &token)?;
+        }
+        run_job_with(&cfg, &token)
+    }));
+    drop(guard);
+    let result = match caught {
+        Ok(r) => r,
+        Err(p) => Err(anyhow!("internal: job panicked: {}", panic_message(p.as_ref()))),
+    };
+
+    match &result {
+        Ok(_) => {
+            // EWMA over successes only — failed jobs return fast and
+            // would drag the retry hint toward zero
+            let ms = (t0.elapsed().as_millis() as u64).max(1);
+            let old = shared.avg_job_ms.load(Ordering::Relaxed);
+            shared.avg_job_ms.store((3 * old + ms) / 4, Ordering::Relaxed);
+        }
+        Err(e) => {
+            if let Some(c) = e.downcast_ref::<Cancelled>() {
+                match c.reason {
+                    CancelReason::Deadline => m.timeouts.inc(),
+                    CancelReason::Cancelled => m.cancelled.inc(),
+                }
+            }
+        }
+    }
+    if let Ok(mut map) = shared.active.lock() {
+        map.remove(&id);
+    }
+    // the ticket may already be gone (client hung up); that's fine
+    let _ = reply.send(result);
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = p.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::GraphSpec;
+
+    fn quiet_cfg(workers: usize, queue_depth: usize) -> ExecutorConfig {
+        // explicit fault field: tests must not read TRUSSX_FAULT, env
+        // mutation races across the parallel test harness
+        ExecutorConfig { workers, queue_depth, job_timeout: None, fault: None }
+    }
+
+    fn job(spec: &str) -> JobConfig {
+        JobConfig::new(GraphSpec::parse(spec).unwrap()).threads(1)
+    }
+
+    #[test]
+    fn fault_spec_parses() {
+        assert_eq!(
+            FaultSpec::parse("job.start:200").unwrap(),
+            FaultSpec {
+                point: "job.start".into(),
+                action: FaultAction::Delay(Duration::from_millis(200))
+            }
+        );
+        assert_eq!(FaultSpec::parse("x:panic").unwrap().action, FaultAction::Panic);
+        assert_eq!(FaultSpec::parse("x:err").unwrap().action, FaultAction::Err);
+        assert!(FaultSpec::parse("noaction").is_err());
+        assert!(FaultSpec::parse(":5").is_err());
+        assert!(FaultSpec::parse("x:fast").is_err());
+    }
+
+    #[test]
+    fn submit_and_wait_roundtrip() {
+        let ex = Executor::new(&quiet_cfg(1, 4));
+        let t = ex.submit(job("complete:n=5")).unwrap();
+        let r = t.wait().unwrap();
+        assert_eq!(r.t_max, 5);
+        ex.shutdown(Duration::from_secs(5));
+    }
+
+    #[test]
+    fn full_queue_rejects_busy() {
+        let cfg = ExecutorConfig {
+            fault: Some(FaultSpec::parse("job.start:100").unwrap()),
+            ..quiet_cfg(1, 1)
+        };
+        let ex = Executor::new(&cfg);
+        // worker occupied by #1 (or #1 still queued); by #3 the
+        // depth-1 queue must be full either way
+        let tickets: Vec<_> =
+            (0..3).map(|_| ex.submit(job("complete:n=4"))).collect();
+        let busy = tickets
+            .iter()
+            .filter(|t| matches!(t, Err(SubmitError::Busy { .. })))
+            .count();
+        assert!(busy >= 1, "expected at least one BUSY rejection");
+        if let Err(SubmitError::Busy { retry_after_ms }) =
+            tickets.iter().find(|t| t.is_err()).unwrap()
+        {
+            assert!(*retry_after_ms >= 10, "hint clamped to a floor");
+        }
+        for t in tickets.into_iter().flatten() {
+            t.wait().unwrap();
+        }
+        ex.shutdown(Duration::from_secs(5));
+    }
+
+    #[test]
+    fn deadline_cancels_job_and_frees_worker() {
+        let cfg = ExecutorConfig {
+            fault: Some(FaultSpec::parse("job.start:200").unwrap()),
+            ..quiet_cfg(1, 2)
+        };
+        let ex = Executor::new(&cfg);
+        let t = ex.submit(job("complete:n=4").timeout(0.02)).unwrap();
+        let err = t.wait().unwrap_err();
+        let c = err.downcast_ref::<Cancelled>().expect("typed Cancelled");
+        assert_eq!(c.reason, CancelReason::Deadline);
+        // the worker survived and still serves
+        let r = ex.submit(job("complete:n=4")).unwrap().wait().unwrap();
+        assert_eq!(r.t_max, 4);
+        ex.shutdown(Duration::from_secs(5));
+    }
+
+    #[test]
+    fn explicit_cancel_beats_deadline() {
+        let cfg = ExecutorConfig {
+            fault: Some(FaultSpec::parse("job.start:500").unwrap()),
+            ..quiet_cfg(1, 2)
+        };
+        let ex = Executor::new(&cfg);
+        let t = ex.submit(job("complete:n=4")).unwrap();
+        t.cancel();
+        let err = t.wait().unwrap_err();
+        let c = err.downcast_ref::<Cancelled>().expect("typed Cancelled");
+        assert_eq!(c.reason, CancelReason::Cancelled);
+        ex.shutdown(Duration::from_secs(5));
+    }
+
+    #[test]
+    fn panic_is_isolated_to_the_job() {
+        let cfg = ExecutorConfig {
+            fault: Some(FaultSpec::parse("job.start:panic").unwrap()),
+            ..quiet_cfg(1, 2)
+        };
+        let ex = Executor::new(&cfg);
+        let err = ex.submit(job("complete:n=4")).unwrap().wait().unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err:#}");
+        // same single worker answers the next request → it survived
+        let err2 = ex.submit(job("complete:n=4")).unwrap().wait().unwrap_err();
+        assert!(err2.to_string().contains("panicked"), "{err2:#}");
+        assert_eq!(ex.inflight(), 0, "RAII guard must release on panic");
+        ex.shutdown(Duration::from_secs(5));
+    }
+
+    #[test]
+    fn shutdown_drains_inflight_job() {
+        let cfg = ExecutorConfig {
+            fault: Some(FaultSpec::parse("job.start:100").unwrap()),
+            ..quiet_cfg(1, 2)
+        };
+        let ex = Executor::new(&cfg);
+        let t = ex.submit(job("complete:n=4")).unwrap();
+        ex.shutdown(Duration::from_secs(10));
+        // drain waited: the reply is a success, not a cancellation
+        let r = t.wait().unwrap();
+        assert_eq!(r.t_max, 4);
+        assert!(matches!(
+            ex.submit(job("complete:n=4")),
+            Err(SubmitError::ShuttingDown)
+        ));
+    }
+
+    #[test]
+    fn drain_deadline_cancels_stragglers() {
+        let cfg = ExecutorConfig {
+            fault: Some(FaultSpec::parse("job.start:10000").unwrap()),
+            ..quiet_cfg(1, 2)
+        };
+        let ex = Executor::new(&cfg);
+        let t = ex.submit(job("complete:n=4")).unwrap();
+        let t0 = Instant::now();
+        ex.shutdown(Duration::from_millis(100));
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "shutdown must not wait out a 10s job"
+        );
+        let err = t.wait().unwrap_err();
+        let c = err.downcast_ref::<Cancelled>().expect("typed Cancelled");
+        assert_eq!(c.reason, CancelReason::Cancelled);
+    }
+}

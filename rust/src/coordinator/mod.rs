@@ -1,14 +1,19 @@
 //! The coordination layer: job configuration, the decomposition
-//! pipeline (load/generate → order → decompose → report), and a
-//! multi-client analytics server.
+//! pipeline (load/generate → order → decompose → report), a bounded
+//! job executor, and a multi-client analytics server.
 //!
 //! This is the "framework" face of the library: examples, the CLI, the
-//! benches and the server all drive the same [`pipeline::run_job`].
+//! benches and the server all drive the same [`pipeline::run_job`]. The
+//! server admits work through [`executor::Executor`] — a fixed worker
+//! pool with bounded queueing, per-job deadlines/cancellation, and
+//! graceful drain — instead of spawning a thread per request.
 
 mod config;
+mod executor;
 mod pipeline;
 mod server;
 
 pub use config::{Algorithm, GraphSpec, JobConfig};
-pub use pipeline::{run_job, JobReport};
-pub use server::{serve, Client, ServerHandle};
+pub use executor::{Executor, ExecutorConfig, FaultAction, FaultSpec, JobTicket, SubmitError};
+pub use pipeline::{run_job, run_job_with, JobReport};
+pub use server::{serve, serve_with, Client, ServerConfig, ServerHandle};

@@ -5,7 +5,7 @@ use super::{Algorithm, JobConfig};
 use crate::graph::EdgeGraph;
 use crate::metrics::{gweps, Timer};
 use crate::order;
-use crate::par::Pool;
+use crate::par::{CancelToken, Pool};
 use crate::truss::{self, PktStats};
 use crate::{triangle, validate};
 use anyhow::{bail, Result};
@@ -58,11 +58,29 @@ impl JobReport {
     }
 }
 
-/// Run a job end to end.
+/// Run a job end to end (no cancellation — an inert token).
 pub fn run_job(cfg: &JobConfig) -> Result<JobReport> {
+    run_job_with(cfg, &CancelToken::never())
+}
+
+/// Return early with a [`crate::par::Cancelled`] error if the token has
+/// fired. Used between pipeline phases; within a phase the decomposition
+/// polls the token at its own level/chunk boundaries.
+fn checkpoint(token: &CancelToken, at: &'static str) -> Result<()> {
+    if token.should_stop().is_some() {
+        return Err(token.stopped(at, String::new()).into());
+    }
+    Ok(())
+}
+
+/// [`run_job`] with cooperative cancellation. The token is polled at
+/// phase boundaries here and inside the support/peel loops; on stop the
+/// error downcasts to [`crate::par::Cancelled`] with partial progress.
+pub fn run_job_with(cfg: &JobConfig, token: &CancelToken) -> Result<JobReport> {
     let t_build = Timer::start();
     let g0 = cfg.graph.build()?;
     let build_secs = t_build.secs();
+    checkpoint(token, "pipeline.build")?;
 
     let t_order = Timer::start();
     let (g, _perm) = order::reorder(&g0, cfg.ordering);
@@ -83,7 +101,7 @@ pub fn run_job(cfg: &JobConfig) -> Result<JobReport> {
         let mut rep = validate::Report::new();
         validate::check_graph(&eg.g, &mut rep);
         validate::check_edge_graph(&eg, &mut rep);
-        let s = triangle::into_plain(triangle::support_am4(&eg, &pool));
+        let s = triangle::into_plain(triangle::support_am4_with(&eg, &pool, token)?);
         validate::check_support(&eg, &s, &mut rep);
         if let Some(err) = rep.error() {
             bail!("pre-decomposition validation failed:\n{err}");
@@ -91,9 +109,13 @@ pub fn run_job(cfg: &JobConfig) -> Result<JobReport> {
         validate_secs = t_val.secs();
     }
 
+    checkpoint(token, "pipeline.decompose")?;
     let t_dec = Timer::start();
     let result = match cfg.algorithm {
-        Algorithm::Pkt => truss::pkt_config(&eg, &pool, &cfg.pkt),
+        // PKT threads the token all the way into the peel's level loop;
+        // the serial/baseline algorithms only honor the phase boundary
+        // above (they have no natural sync points to poll at).
+        Algorithm::Pkt => truss::pkt_config_with(&eg, &pool, &cfg.pkt, token)?,
         Algorithm::Wc => truss::wc(&eg),
         Algorithm::Ros => truss::ros(&eg, &pool),
         Algorithm::Local => truss::local(&eg, &pool, 100_000),
@@ -186,6 +208,17 @@ mod tests {
         let base = run_job(&JobConfig::new(base_spec).threads(2)).unwrap();
         assert_eq!(base.validate_secs, 0.0, "no validation time when off");
         assert_eq!(r.trussness, base.trussness, "validation must not perturb results");
+    }
+
+    #[test]
+    fn pipeline_cancellation_downcasts() {
+        let spec = GraphSpec::parse("er:n=300,p=0.05,seed=9").unwrap();
+        let token = CancelToken::with_timeout(Some(std::time::Duration::ZERO));
+        let err = run_job_with(&JobConfig::new(spec).threads(2), &token).unwrap_err();
+        let c = err
+            .downcast_ref::<crate::par::Cancelled>()
+            .expect("cancellation must surface as a typed Cancelled error");
+        assert_eq!(c.reason.name(), "DEADLINE");
     }
 
     #[test]

@@ -1,5 +1,10 @@
 //! A multi-client truss-analytics server over TCP (std::net,
-//! thread-per-connection — tokio is not available offline).
+//! thread-per-connection readers — tokio is not available offline).
+//!
+//! Connections are cheap reader threads; the actual decompositions run
+//! on the bounded [`Executor`] pool, so client count no longer equals
+//! concurrent peel count. A full queue is refused up front with a
+//! structured `ERR BUSY retry_after_ms=N` instead of stacking work.
 //!
 //! Line protocol (one request per line, one `OK ...` / `ERR ...` reply;
 //! `METRICS` is the one multi-line reply, framed by its header):
@@ -8,32 +13,75 @@
 //! DECOMP <graphspec> [algo=pkt|wc|ros|local] [threads=N] [order=nat|deg|kco]
 //!                    [compact=0.3] [bitsets=true]     (pkt peel tuning)
 //!                    [validate=true]    (deep invariant checks, see crate::validate)
+//!                    [timeout=SECS]     (per-job deadline → ERR DEADLINE)
 //! HIST    <graphspec> [...same options]   → trussness histogram
-//! STATUS                                  → jobs, in-flight, uptime, threads
+//! STATUS                                  → jobs, in-flight, queue, conns, uptime
 //! METRICS                                 → OK lines=<N> + N exposition lines
 //! QUIT                                    → close this connection
 //! ```
 //!
+//! Error replies a client must be ready to handle:
+//!
+//! ```text
+//! ERR BUSY retry_after_ms=<N>   queue full — back off and retry
+//! ERR DEADLINE <detail>         the job's timeout= expired mid-run
+//! ERR CANCELLED <detail>        cancelled (e.g. server drain deadline)
+//! ERR SHUTDOWN draining         server is shutting down
+//! ERR line too long (...)       request exceeded 64 KiB; line dropped
+//! ERR <message>                 parse/validation/internal errors
+//! ```
+//!
 //! Every request is counted, timed, and error-tracked per verb in the
 //! global `obs` registry (`server_requests_total{verb=..}`,
-//! `server_errors_total{verb=..}`, `server_request_seconds{verb=..}`),
-//! which `METRICS` then serves back in Prometheus text format.
+//! `server_errors_total{verb=..}`, `server_request_seconds{verb=..}`);
+//! the executor adds `server_rejected_total`, `server_timeouts_total`,
+//! `server_cancelled_total`, `server_inflight_jobs` and
+//! `server_queue_depth`. `METRICS` serves it all back in Prometheus
+//! text format. Structured refusals (BUSY/DEADLINE/CANCELLED) are
+//! tracked by their own counters, not `server_errors_total` — they are
+//! protocol outcomes the client is expected to act on, not faults.
 
+use super::executor::{Executor, ExecutorConfig};
 use super::{Algorithm, GraphSpec, JobConfig};
 use crate::obs;
 use crate::order::Ordering as VOrdering;
-use anyhow::{anyhow, Context, Result};
+use crate::par::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::par::Cancelled;
+use anyhow::{anyhow, ensure, Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use crate::par::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Longest accepted request line. A client streaming an unterminated
+/// line used to grow the read buffer without bound; past this cap the
+/// line is dropped and refused, and the connection stays usable.
+const MAX_LINE_BYTES: u64 = 64 * 1024;
+
+/// Server tuning: executor sizing plus the shutdown drain budget.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub executor: ExecutorConfig,
+    /// How long [`ServerHandle::shutdown`] waits for in-flight and
+    /// queued jobs before cancelling them through their tokens.
+    pub drain: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { executor: ExecutorConfig::default(), drain: Duration::from_secs(5) }
+    }
+}
 
 struct ServerState {
     stop: AtomicBool,
     jobs: AtomicU64,
-    inflight: AtomicU64,
+    /// Live client connections (reader threads).
+    conns: AtomicU64,
     started: Instant,
+    executor: Executor,
+    workers: usize,
+    queue_depth: usize,
 }
 
 /// Handle to a running server; dropping it does NOT stop the server —
@@ -42,6 +90,7 @@ pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     state: Arc<ServerState>,
     join: Option<std::thread::JoinHandle<()>>,
+    drain: Duration,
 }
 
 impl ServerHandle {
@@ -50,7 +99,15 @@ impl ServerHandle {
         self.state.jobs.load(Ordering::Relaxed)
     }
 
-    /// Stop accepting and join the accept loop.
+    /// Live client connections right now.
+    pub fn connections(&self) -> u64 {
+        self.state.conns.load(Ordering::Relaxed)
+    }
+
+    /// Graceful drain: stop accepting, join the accept loop, then let
+    /// the executor finish in-flight and queued jobs up to the drain
+    /// deadline — stragglers are cancelled through their tokens, so
+    /// this returns in bounded time even with a wedged job.
     pub fn shutdown(mut self) {
         // ORDERING: Release pairs with the Acquire load in the accept
         // loop; the flag is the only state published through this edge,
@@ -62,21 +119,32 @@ impl ServerHandle {
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
+        self.state.executor.shutdown(self.drain);
     }
 }
 
-/// Start the server on `addr` (use port 0 for an ephemeral port).
-/// Returns once the listener is bound.
+/// Start the server on `addr` (use port 0 for an ephemeral port) with
+/// default tuning. Returns once the listener is bound.
 pub fn serve(addr: &str) -> Result<ServerHandle> {
+    serve_with(addr, ServerConfig::default())
+}
+
+/// [`serve`] with explicit executor sizing and drain budget.
+pub fn serve_with(addr: &str, cfg: ServerConfig) -> Result<ServerHandle> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let local = listener.local_addr()?;
     let state = Arc::new(ServerState {
         stop: AtomicBool::new(false),
         jobs: AtomicU64::new(0),
-        inflight: AtomicU64::new(0),
+        conns: AtomicU64::new(0),
         started: Instant::now(),
+        executor: Executor::new(&cfg.executor),
+        workers: cfg.executor.workers.max(1),
+        queue_depth: cfg.executor.queue_depth.max(1),
     });
     let accept_state = state.clone();
+    // SPAWN: the accept loop; joined in ServerHandle::shutdown after
+    // the stop flag is raised and the listener poked awake.
     let join = std::thread::spawn(move || {
         for conn in listener.incoming() {
             // ORDERING: Acquire pairs with the Release store in
@@ -86,23 +154,43 @@ pub fn serve(addr: &str) -> Result<ServerHandle> {
             }
             let Ok(stream) = conn else { continue };
             let st = accept_state.clone();
+            // SPAWN: one cheap reader thread per connection — it blocks
+            // on the socket; decompositions run on the bounded executor
+            // pool, so this thread count does not bound CPU work.
             std::thread::spawn(move || {
+                st.conns.fetch_add(1, Ordering::Relaxed);
                 let _ = handle_connection(stream, &st);
+                st.conns.fetch_sub(1, Ordering::Relaxed);
             });
         }
     });
-    Ok(ServerHandle { addr: local, state, join: Some(join) })
+    Ok(ServerHandle { addr: local, state, join: Some(join), drain: cfg.drain })
 }
 
 fn handle_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
-    let peer = stream.peer_addr()?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     let mut line = String::new();
     loop {
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
+        // cap the read: an unterminated line stops growing at the cap
+        // instead of exhausting memory
+        let n = (&mut reader).take(MAX_LINE_BYTES).read_line(&mut line)?;
+        if n == 0 {
             return Ok(()); // client closed
+        }
+        if n as u64 == MAX_LINE_BYTES && !line.ends_with('\n') {
+            // truncated an oversized line: discard the remainder so the
+            // connection stays usable, refuse, keep serving
+            let m = verb_metrics("UNKNOWN");
+            m.requests.inc();
+            m.errors.inc();
+            skip_to_newline(&mut reader)?;
+            writer.write_all(
+                format!("ERR line too long (max {MAX_LINE_BYTES} bytes)\n").as_bytes(),
+            )?;
+            writer.flush()?;
+            continue;
         }
         let req = line.trim();
         if req.is_empty() {
@@ -125,7 +213,27 @@ fn handle_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
         writer.write_all(reply.as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
-        let _ = peer;
+    }
+}
+
+/// Discard buffered input through the next newline (or EOF), after the
+/// line cap truncated a request mid-line.
+fn skip_to_newline(reader: &mut BufReader<TcpStream>) -> Result<()> {
+    loop {
+        let buf = reader.fill_buf()?;
+        if buf.is_empty() {
+            return Ok(()); // EOF — the final read_line will report it
+        }
+        match buf.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                reader.consume(i + 1);
+                return Ok(());
+            }
+            None => {
+                let len = buf.len();
+                reader.consume(len);
+            }
+        }
     }
 }
 
@@ -164,11 +272,16 @@ fn dispatch(req: &str, state: &ServerState) -> Result<Option<String>> {
     match verb.as_str() {
         "QUIT" => Ok(None),
         "STATUS" => Ok(Some(format!(
-            "OK jobs={} inflight={} uptime_secs={:.3} threads_default={}",
+            "OK jobs={} inflight={} queued={} conns={} uptime_secs={:.3} \
+             threads_default={} workers={} queue_depth={}",
             state.jobs.load(Ordering::Relaxed),
-            state.inflight.load(Ordering::Relaxed),
+            state.executor.inflight(),
+            state.executor.queued(),
+            state.conns.load(Ordering::Relaxed),
             state.started.elapsed().as_secs_f64(),
-            crate::par::Pool::default_threads()
+            crate::par::Pool::default_threads(),
+            state.workers,
+            state.queue_depth,
         ))),
         "METRICS" => {
             let body = obs::expo::render(obs::global());
@@ -182,11 +295,21 @@ fn dispatch(req: &str, state: &ServerState) -> Result<Option<String>> {
         "DECOMP" | "HIST" => {
             let spec_str = parts.next().context("missing graph spec")?;
             let cfg = parse_job(spec_str, parts)?;
-            let gauge = obs::global().gauge("server_inflight_jobs", &[]);
-            gauge.set(state.inflight.fetch_add(1, Ordering::Relaxed) as f64 + 1.0);
-            let report = super::run_job(&cfg);
-            gauge.set(state.inflight.fetch_sub(1, Ordering::Relaxed) as f64 - 1.0);
-            let report = report?;
+            let ticket = match state.executor.submit(cfg) {
+                Ok(t) => t,
+                // admission refusals are structured protocol replies
+                // the client acts on, not error-counter events
+                Err(e) => return Ok(Some(format!("ERR {e}"))),
+            };
+            let report = match ticket.wait() {
+                Ok(r) => r,
+                Err(e) => {
+                    if let Some(c) = e.downcast_ref::<Cancelled>() {
+                        return Ok(Some(format!("ERR {} {}", c.reason.name(), c.describe())));
+                    }
+                    return Err(e);
+                }
+            };
             state.jobs.fetch_add(1, Ordering::Relaxed);
             if verb == "DECOMP" {
                 Ok(Some(format!("OK {}", report.summary())))
@@ -222,6 +345,13 @@ fn parse_job<'a>(spec_str: &str, opts: impl Iterator<Item = &'a str>) -> Result<
             }
             "bitsets" => cfg.pkt.use_bitsets = v.parse().context("bad bitsets flag")?,
             "validate" => cfg.validate = v.parse().context("bad validate flag")?,
+            "timeout" => {
+                let t: f64 = v.parse().context("bad timeout")?;
+                // Duration::from_secs_f64 panics on negative/NaN input —
+                // reject here so bad client input stays an ERR reply
+                ensure!(t.is_finite() && t >= 0.0, "bad timeout '{v}' (want seconds >= 0)");
+                cfg.timeout = Some(t);
+            }
             _ => return Err(anyhow!("unknown option '{k}'")),
         }
     }
@@ -232,12 +362,15 @@ fn parse_job<'a>(spec_str: &str, opts: impl Iterator<Item = &'a str>) -> Result<
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// Backoff jitter state for [`Client::request_with_retry`].
+    seed: u64,
 }
 
 impl Client {
     pub fn connect(addr: std::net::SocketAddr) -> Result<Self> {
         let stream = TcpStream::connect(addr)?;
-        Ok(Self { reader: BufReader::new(stream.try_clone()?), writer: stream })
+        let seed = 0x9E37_79B9_7F4A_7C15 ^ u64::from(stream.local_addr()?.port());
+        Ok(Self { reader: BufReader::new(stream.try_clone()?), writer: stream, seed })
     }
 
     /// Send one request line, read one reply line.
@@ -248,6 +381,37 @@ impl Client {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         Ok(line.trim_end().to_string())
+    }
+
+    /// [`Client::request`] plus admission-control handling: on an
+    /// `ERR BUSY` reply, sleep max(server hint, doubling backoff) plus
+    /// jitter and retry, up to `max_retries` times. Returns the last
+    /// reply either way — callers still check for `OK`.
+    pub fn request_with_retry(&mut self, req: &str, max_retries: usize) -> Result<String> {
+        let mut backoff_ms: u64 = 10;
+        let mut reply = self.request(req)?;
+        for _ in 0..max_retries {
+            let Some(rest) = reply.strip_prefix("ERR BUSY") else {
+                return Ok(reply);
+            };
+            let hint = rest
+                .split_whitespace()
+                .find_map(|f| f.strip_prefix("retry_after_ms="))
+                .and_then(|v| v.parse::<u64>().ok())
+                .unwrap_or(backoff_ms);
+            // deterministic LCG jitter (no RNG dependency): desyncs
+            // clients that were rejected in the same instant
+            self.seed = self
+                .seed
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let wait = hint.max(backoff_ms);
+            let jitter = self.seed % (wait / 2 + 1);
+            std::thread::sleep(Duration::from_millis(wait + jitter));
+            backoff_ms = (backoff_ms * 2).min(2000);
+            reply = self.request(req)?;
+        }
+        Ok(reply)
     }
 
     /// Fetch the Prometheus exposition via `METRICS`: reads the
@@ -276,6 +440,17 @@ impl Client {
 mod tests {
     use super::*;
 
+    /// Exact-match STATUS field extraction: `contains("jobs=1")` would
+    /// also match `jobs=10` — the old roundtrip assertion had exactly
+    /// that bug and silently passed on a stale count.
+    fn status_field(reply: &str, key: &str) -> String {
+        reply
+            .split_whitespace()
+            .find_map(|f| f.strip_prefix(&format!("{key}=")))
+            .unwrap_or_else(|| panic!("missing {key}= in '{reply}'"))
+            .to_string()
+    }
+
     #[test]
     fn server_decomp_roundtrip() {
         let h = serve("127.0.0.1:0").unwrap();
@@ -291,8 +466,9 @@ mod tests {
         // deep invariant checks pass on a clean pipeline
         let r = c.request("DECOMP complete:n=6 validate=true threads=2").unwrap();
         assert!(r.contains("tmax=6"), "{r}");
+        // three DECOMP jobs ran on this server — count them exactly
         let r = c.request("STATUS").unwrap();
-        assert!(r.contains("jobs=1"), "{r}");
+        assert_eq!(status_field(&r, "jobs"), "3", "{r}");
         h.shutdown();
     }
 
@@ -316,6 +492,10 @@ mod tests {
         assert!(c.request("DECOMP er:n=10,p=0.1 compact=x").unwrap().starts_with("ERR"));
         assert!(c.request("DECOMP er:n=10,p=0.1 bitsets=2").unwrap().starts_with("ERR"));
         assert!(c.request("DECOMP er:n=10,p=0.1 validate=x").unwrap().starts_with("ERR"));
+        // timeout= must be a finite non-negative number of seconds
+        assert!(c.request("DECOMP er:n=10,p=0.1 timeout=abc").unwrap().starts_with("ERR"));
+        assert!(c.request("DECOMP er:n=10,p=0.1 timeout=-1").unwrap().starts_with("ERR"));
+        assert!(c.request("DECOMP er:n=10,p=0.1 timeout=nan").unwrap().starts_with("ERR"));
         // server still alive after errors
         assert!(c.request("STATUS").unwrap().starts_with("OK"));
         h.shutdown();
@@ -327,15 +507,14 @@ mod tests {
         let mut c = Client::connect(h.addr).unwrap();
         let r = c.request("STATUS").unwrap();
         assert!(r.starts_with("OK jobs=0 "), "{r}");
-        assert!(r.contains("inflight=0"), "{r}");
+        assert_eq!(status_field(&r, "inflight"), "0", "{r}");
+        assert_eq!(status_field(&r, "queued"), "0", "{r}");
+        assert_eq!(status_field(&r, "conns"), "1", "{r}");
         assert!(r.contains("uptime_secs="), "{r}");
         assert!(r.contains("threads_default="), "{r}");
-        let uptime: f64 = r
-            .split_whitespace()
-            .find_map(|f| f.strip_prefix("uptime_secs="))
-            .unwrap()
-            .parse()
-            .unwrap();
+        assert!(r.contains("workers="), "{r}");
+        assert!(r.contains("queue_depth="), "{r}");
+        let uptime: f64 = status_field(&r, "uptime_secs").parse().unwrap();
         assert!(uptime >= 0.0);
         h.shutdown();
     }
@@ -353,6 +532,9 @@ mod tests {
         );
         assert!(body.contains("# TYPE server_request_seconds histogram"), "{body}");
         assert!(body.contains("phase_seconds_bucket{phase=\"pkt.peel\""), "{body}");
+        // the executor's gauges register on first use
+        assert!(body.contains("server_inflight_jobs"), "{body}");
+        assert!(body.contains("server_queue_depth"), "{body}");
         // the connection stays usable after the multi-line reply
         assert!(c.request("STATUS").unwrap().starts_with("OK "));
         h.shutdown();
@@ -377,6 +559,16 @@ mod tests {
             th.join().unwrap();
         }
         assert_eq!(h.jobs_served(), 4);
+        h.shutdown();
+    }
+
+    #[test]
+    fn server_timeout_option_roundtrip() {
+        let h = serve("127.0.0.1:0").unwrap();
+        let mut c = Client::connect(h.addr).unwrap();
+        // a generous deadline on a tiny job completes normally
+        let r = c.request("DECOMP complete:n=5 threads=1 timeout=30").unwrap();
+        assert!(r.starts_with("OK "), "{r}");
         h.shutdown();
     }
 }

@@ -10,8 +10,9 @@
 //!   [34]; synchronization-free but not work-efficient.
 
 use crate::graph::{Graph, Vertex};
+use crate::par::cancel::{CancelToken, Cancelled};
 use crate::par::{AtomicVec, BatchWriter, Counter, Pool};
-use crate::par::sync::atomic::{AtomicI64, AtomicU32, Ordering};
+use crate::par::sync::atomic::{AtomicBool, AtomicI64, AtomicU32, Ordering};
 
 /// Serial BZ k-core: returns the coreness of every vertex.
 pub fn bz(g: &Graph) -> Vec<u32> {
@@ -70,10 +71,22 @@ pub fn bz(g: &Graph) -> Vec<u32> {
 /// Parallel ParK-style k-core. Level-synchronous peeling with frontier
 /// arrays; the direct vertex analogue of PKT's edge peeling.
 pub fn park(g: &Graph, pool: &Pool) -> Vec<u32> {
+    match park_with(g, pool, &CancelToken::never()) {
+        Ok(core) => core,
+        // a never-token cannot stop the peel
+        Err(c) => unreachable!("park cancelled without a token: {c}"),
+    }
+}
+
+/// [`park`] with cooperative cancellation, polled at level boundaries —
+/// the natural checkpoint of the level-synchronous structure (tid 0
+/// checks after finishing each level; the level in flight always runs
+/// to completion, so the peel invariants hold when we unwind).
+pub fn park_with(g: &Graph, pool: &Pool, token: &CancelToken) -> Result<Vec<u32>, Cancelled> {
     let _sp = crate::obs::span("kcore.park");
     let n = g.n();
     if n == 0 {
-        return vec![];
+        return Ok(vec![]);
     }
     let deg: Vec<AtomicI64> =
         (0..n).map(|u| AtomicI64::new(g.degree(u as Vertex) as i64)).collect();
@@ -83,6 +96,7 @@ pub fn park(g: &Graph, pool: &Pool) -> Vec<u32> {
     let todo = AtomicI64::new(n as i64);
     let scan_counter = Counter::new();
     let proc_counter = Counter::new();
+    let want_stop = AtomicBool::new(false);
 
     pool.region(|ctx| {
         let mut level: i64 = 0;
@@ -148,13 +162,29 @@ pub fn park(g: &Graph, pool: &Pool) -> Vec<u32> {
             if ctx.tid == 0 {
                 frontier_a.clear();
                 frontier_b.clear();
+                // level boundary: the cooperative cancellation checkpoint
+                // (same tid-0 publish pattern as the compaction request
+                // in the PKT stage loop)
+                if token.should_stop().is_some() {
+                    // ORDERING: Release pairs with the Acquire below;
+                    // every thread must agree on the exit decision taken
+                    // at this boundary.
+                    want_stop.store(true, Ordering::Release);
+                }
             }
             ctx.barrier();
             level += 1;
+            if want_stop.load(Ordering::Acquire) {
+                break;
+            }
         }
     });
 
-    core.into_iter().map(|c| c.into_inner()).collect()
+    if want_stop.load(Ordering::Acquire) && todo.load(Ordering::Acquire) > 0 {
+        let remaining = todo.load(Ordering::Acquire).max(0);
+        return Err(token.stopped("kcore.level", format!("remaining={remaining}/{n}")));
+    }
+    Ok(core.into_iter().map(|c| c.into_inner()).collect())
 }
 
 /// Maximum coreness (`c_max` in Table 1).
@@ -323,6 +353,20 @@ mod tests {
         let g = crate::graph::Graph::from_csr(vec![0], vec![]);
         assert!(bz(&g).is_empty());
         assert!(park(&g, &Pool::new(2)).is_empty());
+    }
+
+    #[test]
+    fn park_cancellation_unwinds_cleanly() {
+        let g = gen::erdos_renyi(300, 0.05, 11);
+        // expired deadline: the first level-boundary check fires while
+        // vertices remain, and the error reports the partial progress
+        let token = CancelToken::with_timeout(Some(std::time::Duration::ZERO));
+        let err = park_with(&g, &Pool::new(2), &token).unwrap_err();
+        assert_eq!(err.at, "kcore.level");
+        assert!(err.partial.contains("remaining="), "{}", err.partial);
+        // an inert token matches the serial oracle exactly
+        let core = park_with(&g, &Pool::new(2), &CancelToken::never()).unwrap();
+        assert_eq!(core, bz(&g));
     }
 
     #[test]

@@ -14,6 +14,11 @@
 //! 4. **`atomic-import`** — atomics come from `crate::par::sync::atomic`
 //!    (the loom shim), never `std::sync::atomic` directly; code that
 //!    bypasses the shim is invisible to the loom models.
+//! 5. **`coordinator-spawn`** — thread creation (`thread::spawn` /
+//!    `thread::Builder`) in `coordinator/` needs a `SPAWN:` comment
+//!    stating who bounds and joins the thread: unaccounted spawns are
+//!    how the server's unbounded-concurrency bug happened, and new work
+//!    belongs on the executor pool, not ad-hoc threads.
 //!
 //! The scanner is text-level but syntax-aware where it matters: string
 //! literals (including multi-line and raw `r#"…"#` strings), `//` and
@@ -222,6 +227,7 @@ pub fn lint_source(path: &str, src: &str) -> Vec<LintViolation> {
     let norm = path.replace('\\', "/");
     let is_sync_shim = norm.ends_with("par/sync.rs");
     let is_server = norm.ends_with("coordinator/server.rs");
+    let is_coordinator = norm.contains("/coordinator/") || norm.starts_with("coordinator/");
 
     // (raw trimmed line, code part, comment part) per line
     let mut mode = Mode::Code;
@@ -296,6 +302,18 @@ pub fn lint_source(path: &str, src: &str) -> Vec<LintViolation> {
                     .into(),
             );
         }
+        if is_coordinator
+            && (code.contains("thread::spawn") || code.contains("thread::Builder"))
+            && !has_marker(idx, "SPAWN:")
+        {
+            fail(
+                "coordinator-spawn",
+                idx,
+                "thread creation in coordinator/ needs a `SPAWN:` comment naming its \
+                 bound and join point; job work belongs on the executor pool"
+                    .into(),
+            );
+        }
     }
     out
 }
@@ -352,6 +370,23 @@ mod tests {
         let src = "use std::sync::atomic::AtomicUsize;\n";
         assert_eq!(rules("src/truss/pkt.rs", src), vec!["atomic-import"]);
         assert!(rules("src/par/sync.rs", src).is_empty());
+    }
+
+    #[test]
+    fn coordinator_spawn_needs_marker() {
+        let src = "fn f() { std::thread::spawn(|| work()); }\n";
+        assert_eq!(rules("src/coordinator/server.rs", src), vec!["coordinator-spawn"]);
+        let src = "fn f() { let b = std::thread::Builder::new(); }\n";
+        assert_eq!(rules("src/coordinator/executor.rs", src), vec!["coordinator-spawn"]);
+        // a SPAWN: comment above (or on the line) suppresses
+        let src = "// SPAWN: one per connection, exits with the socket\n\
+                   fn f() { std::thread::spawn(|| work()); }\n";
+        assert!(rules("src/coordinator/server.rs", src).is_empty());
+        let src = "fn f() { std::thread::spawn(|| w()); } // SPAWN: joined below\n";
+        assert!(rules("src/coordinator/server.rs", src).is_empty());
+        // outside coordinator/ the rule does not apply
+        let src = "fn f() { std::thread::spawn(|| work()); }\n";
+        assert!(rules("src/par/runtime.rs", src).is_empty());
     }
 
     #[test]

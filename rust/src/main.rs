@@ -3,10 +3,11 @@
 //! ```text
 //! pallas decompose <graphspec> [--algo pkt|wc|ros|local] [--threads N]
 //!                  [--order nat|deg|kco] [--hist] [--validate]
-//!                  [--compact-threshold F] [--no-bitsets]
+//!                  [--compact-threshold F] [--no-bitsets] [--job-timeout SECS]
 //! pallas stats <graphspec>
 //! pallas bench <id|all> [--scale S] [--threads N] [--smoke]
-//! pallas serve [--addr HOST:PORT]
+//! pallas serve [--addr HOST:PORT] [--workers N] [--queue-depth N]
+//!              [--job-timeout SECS] [--drain-secs SECS]
 //! pallas generate <graphspec> --out FILE[.el|.bin]
 //! pallas report <trace.jsonl>
 //! pallas lint [root...]
@@ -19,7 +20,10 @@
 //! (Arg parsing is hand-rolled: the offline registry carries no clap.)
 
 use anyhow::{anyhow, bail, Context, Result};
-use trussx::coordinator::{run_job, serve, Algorithm, GraphSpec, JobConfig};
+use trussx::coordinator::{
+    run_job_with, serve_with, Algorithm, ExecutorConfig, GraphSpec, JobConfig, ServerConfig,
+};
+use trussx::par::CancelToken;
 use trussx::graph::{io, EdgeGraph};
 use trussx::kcore;
 use trussx::obs;
@@ -117,11 +121,11 @@ fn dispatch(args: &[String]) -> Result<()> {
 fn print_help() {
     println!(
         "pallas — shared-memory graph truss decomposition (PKT)\n\n\
-         USAGE:\n  pallas decompose <graphspec> [--algo pkt|wc|ros|local] [--threads N] [--order nat|deg|kco] [--hist]\n                   [--compact-threshold F] [--no-bitsets]   (pkt peel tuning)\n                   [--validate]   (deep invariant checks; also via TRUSSX_VALIDATE=1)\n  \
+         USAGE:\n  pallas decompose <graphspec> [--algo pkt|wc|ros|local] [--threads N] [--order nat|deg|kco] [--hist]\n                   [--compact-threshold F] [--no-bitsets]   (pkt peel tuning)\n                   [--validate]   (deep invariant checks; also via TRUSSX_VALIDATE=1)\n                   [--job-timeout SECS]   (deadline; stops at the next level boundary)\n  \
          pallas stats <graphspec>\n  \
          pallas bench <table1|table2|table3|table4|fig4|fig5|fig6|ablate|pkt|xla|all> [--scale S] [--threads N] [--smoke]\n  \
          pallas query <graphspec> --vertex V [--k K]\n  \
-         pallas serve [--addr HOST:PORT]\n  \
+         pallas serve [--addr HOST:PORT] [--workers N] [--queue-depth N] [--job-timeout SECS] [--drain-secs SECS]\n  \
          pallas generate <graphspec> --out FILE(.el|.bin)\n  \
          pallas report <trace.jsonl>\n  \
          pallas lint [root...]   (concurrency-hygiene source lint; default roots rust/src)\n\n\
@@ -161,7 +165,19 @@ fn cmd_decompose(args: &[String]) -> Result<()> {
         cfg.pkt.use_bitsets = false;
     }
     cfg.validate = o.has("validate");
-    let report = run_job(&cfg)?;
+    if let Some(t) = o.get("job-timeout") {
+        let secs: f64 = t.parse().context("bad --job-timeout")?;
+        anyhow::ensure!(
+            secs.is_finite() && secs >= 0.0,
+            "--job-timeout wants seconds >= 0"
+        );
+        cfg.timeout = Some(secs);
+    }
+    // arm the deadline directly: outside the server there is no
+    // executor to do it for us
+    let token =
+        CancelToken::with_timeout(cfg.timeout.map(std::time::Duration::from_secs_f64));
+    let report = run_job_with(&cfg, &token)?;
     println!("{}", report.summary());
     if cfg.validate || trussx::validate::env_enabled() {
         println!("validation: all checks passed ({:.4}s)", report.validate_secs);
@@ -243,10 +259,48 @@ fn cmd_bench(args: &[String]) -> Result<()> {
 fn cmd_serve(args: &[String]) -> Result<()> {
     let o = Opts::parse(args, &[])?;
     let addr = o.get("addr").unwrap_or("127.0.0.1:7077");
-    let handle = serve(addr)?;
+    let mut exec = ExecutorConfig::default();
+    if let Some(w) = o.get("workers") {
+        exec.workers = w.parse().context("bad --workers")?;
+        anyhow::ensure!(exec.workers >= 1, "--workers wants at least 1");
+    }
+    if let Some(q) = o.get("queue-depth") {
+        exec.queue_depth = q.parse().context("bad --queue-depth")?;
+        anyhow::ensure!(exec.queue_depth >= 1, "--queue-depth wants at least 1");
+    }
+    if let Some(t) = o.get("job-timeout") {
+        let secs: f64 = t.parse().context("bad --job-timeout")?;
+        anyhow::ensure!(
+            secs.is_finite() && secs >= 0.0,
+            "--job-timeout wants seconds >= 0"
+        );
+        exec.job_timeout = Some(std::time::Duration::from_secs_f64(secs));
+    }
+    let mut cfg = ServerConfig { executor: exec, ..ServerConfig::default() };
+    if let Some(d) = o.get("drain-secs") {
+        let secs: f64 = d.parse().context("bad --drain-secs")?;
+        anyhow::ensure!(
+            secs.is_finite() && secs >= 0.0,
+            "--drain-secs wants seconds >= 0"
+        );
+        cfg.drain = std::time::Duration::from_secs_f64(secs);
+    }
+    println!(
+        "executor: {} worker(s), queue depth {}, job timeout {}, drain {:?}",
+        cfg.executor.workers,
+        cfg.executor.queue_depth,
+        cfg.executor
+            .job_timeout
+            .map_or("off".to_string(), |t| format!("{t:?}")),
+        cfg.drain,
+    );
+    let handle = serve_with(addr, cfg)?;
     println!("pallas server listening on {}", handle.addr);
     println!(
-        "protocol: DECOMP <spec> [algo=..] [threads=..] [order=..] [compact=..] [bitsets=..] [validate=..] | HIST <spec> | STATUS | METRICS | QUIT"
+        "protocol: DECOMP <spec> [algo=..] [threads=..] [order=..] [compact=..] [bitsets=..] [validate=..] [timeout=SECS] | HIST <spec> | STATUS | METRICS | QUIT"
+    );
+    println!(
+        "replies:  OK ... | ERR BUSY retry_after_ms=N | ERR DEADLINE ... | ERR CANCELLED ... | ERR ..."
     );
     // foreground: block forever (Ctrl-C to stop)
     loop {

@@ -1,0 +1,204 @@
+//! Cooperative cancellation for long-running jobs.
+//!
+//! A [`CancelToken`] is a cheap clonable handle combining an explicit
+//! cancel flag with an optional wall-clock deadline. Long-running
+//! algorithms poll [`CancelToken::should_stop`] at their natural
+//! synchronization points — the PKT/k-core level boundaries and the
+//! triangle-count chunk boundaries — and unwind with a [`Cancelled`]
+//! error carrying partial-progress detail instead of running to
+//! completion. Nothing is preempted: a token only takes effect where the
+//! algorithm chooses to look at it, which keeps the level-synchronous
+//! invariants intact (a stage always finishes the level it is in).
+//!
+//! Like the rest of `par`, the flag goes through the [`super::sync`]
+//! shim; the module itself is `cfg(not(loom))` (it leans on `Instant`,
+//! which loom cannot model — same policy as `par::runtime`).
+
+use super::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Why a job was asked to stop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelReason {
+    /// The per-job deadline expired (`timeout=` / `--job-timeout`).
+    Deadline,
+    /// Explicitly cancelled (server drain, client gone).
+    Cancelled,
+}
+
+impl CancelReason {
+    /// Stable wire name (used in `ERR DEADLINE` / `ERR CANCELLED`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Deadline => "DEADLINE",
+            Self::Cancelled => "CANCELLED",
+        }
+    }
+}
+
+/// The error a cancelled job unwinds with. Carries where the job was
+/// stopped and a free-form partial-progress summary so callers can
+/// report how far the work got (the tentpole's "partial-stats
+/// reporting").
+#[derive(Clone, Debug)]
+pub struct Cancelled {
+    pub reason: CancelReason,
+    /// The checkpoint that observed the stop, e.g. `pkt.level`.
+    pub at: &'static str,
+    /// Partial-progress detail, e.g. `levels=5 peeled=1234/5000`.
+    pub partial: String,
+}
+
+impl Cancelled {
+    /// One-line description for protocol replies and logs.
+    pub fn describe(&self) -> String {
+        if self.partial.is_empty() {
+            format!("job stopped at {}", self.at)
+        } else {
+            format!("job stopped at {} ({})", self.at, self.partial)
+        }
+    }
+}
+
+impl std::fmt::Display for Cancelled {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.reason.name(), self.describe())
+    }
+}
+
+impl std::error::Error for Cancelled {}
+
+/// A shared stop signal: explicit cancellation plus an optional
+/// deadline, polled cooperatively. Clones share the cancel flag.
+#[derive(Clone, Debug)]
+pub struct CancelToken {
+    cancelled: Arc<AtomicBool>,
+    deadline: Option<Instant>,
+}
+
+impl CancelToken {
+    /// A token that never fires — the default for direct API callers.
+    pub fn never() -> Self {
+        Self { cancelled: Arc::new(AtomicBool::new(false)), deadline: None }
+    }
+
+    /// A token that fires `timeout` from now (`None` = no deadline).
+    pub fn with_timeout(timeout: Option<Duration>) -> Self {
+        Self {
+            cancelled: Arc::new(AtomicBool::new(false)),
+            deadline: timeout.map(|t| Instant::now() + t),
+        }
+    }
+
+    /// Request cancellation; every clone observes it.
+    pub fn cancel(&self) {
+        // ORDERING: Release pairs with the Acquire in `should_stop` —
+        // same single-flag publish pattern as the server stop flag
+        // (loom-checked shape: par::loom_model level-boundary publish).
+        self.cancelled.store(true, Ordering::Release);
+    }
+
+    /// Poll the token: `Some(reason)` once the job should stop.
+    /// Explicit cancellation wins over an expired deadline.
+    pub fn should_stop(&self) -> Option<CancelReason> {
+        // ORDERING: Acquire pairs with the Release in `cancel`.
+        if self.cancelled.load(Ordering::Acquire) {
+            return Some(CancelReason::Cancelled);
+        }
+        match self.deadline {
+            Some(d) if Instant::now() >= d => Some(CancelReason::Deadline),
+            _ => None,
+        }
+    }
+
+    /// The deadline, if any (executors use it to pre-reject queued jobs
+    /// whose budget is already spent).
+    pub fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    /// Build the [`Cancelled`] error for the current stop state; falls
+    /// back to `Deadline` if the token raced back to not-stopped (the
+    /// caller already committed to unwinding).
+    pub fn stopped(&self, at: &'static str, partial: String) -> Cancelled {
+        Cancelled {
+            reason: self.should_stop().unwrap_or(CancelReason::Deadline),
+            at,
+            partial,
+        }
+    }
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        Self::never()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_token_never_fires() {
+        let t = CancelToken::never();
+        assert_eq!(t.should_stop(), None);
+        assert!(t.deadline().is_none());
+    }
+
+    #[test]
+    fn cancel_is_shared_across_clones() {
+        let t = CancelToken::never();
+        let c = t.clone();
+        assert_eq!(c.should_stop(), None);
+        t.cancel();
+        assert_eq!(c.should_stop(), Some(CancelReason::Cancelled));
+        assert_eq!(t.should_stop(), Some(CancelReason::Cancelled));
+    }
+
+    #[test]
+    fn deadline_fires_after_timeout() {
+        let t = CancelToken::with_timeout(Some(Duration::from_millis(5)));
+        // may or may not have fired yet; after sleeping it must have
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(t.should_stop(), Some(CancelReason::Deadline));
+    }
+
+    #[test]
+    fn zero_timeout_fires_immediately() {
+        let t = CancelToken::with_timeout(Some(Duration::ZERO));
+        assert_eq!(t.should_stop(), Some(CancelReason::Deadline));
+    }
+
+    #[test]
+    fn explicit_cancel_wins_over_deadline() {
+        let t = CancelToken::with_timeout(Some(Duration::ZERO));
+        t.cancel();
+        assert_eq!(t.should_stop(), Some(CancelReason::Cancelled));
+    }
+
+    #[test]
+    fn cancelled_error_renders() {
+        let e = Cancelled {
+            reason: CancelReason::Deadline,
+            at: "pkt.level",
+            partial: "levels=3 peeled=10/40".into(),
+        };
+        assert_eq!(e.to_string(), "DEADLINE: job stopped at pkt.level (levels=3 peeled=10/40)");
+        let e2 = Cancelled { reason: CancelReason::Cancelled, at: "x", partial: String::new() };
+        assert_eq!(e2.describe(), "job stopped at x");
+        // downcasts through anyhow (the pipeline error path)
+        let any: anyhow::Error = e.into();
+        assert!(any.downcast_ref::<Cancelled>().is_some());
+    }
+
+    #[test]
+    fn stopped_builds_error_with_reason() {
+        let t = CancelToken::never();
+        t.cancel();
+        let e = t.stopped("kcore.level", "remaining=7".into());
+        assert_eq!(e.reason, CancelReason::Cancelled);
+        assert_eq!(e.at, "kcore.level");
+    }
+}

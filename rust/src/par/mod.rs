@@ -25,7 +25,11 @@
 pub mod sync;
 
 #[cfg(not(loom))]
+pub mod cancel;
+#[cfg(not(loom))]
 mod runtime;
+#[cfg(not(loom))]
+pub use cancel::{CancelReason, CancelToken, Cancelled};
 #[cfg(not(loom))]
 pub use runtime::{Counter, Pool, RegionCtx};
 

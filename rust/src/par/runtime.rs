@@ -166,6 +166,26 @@ impl RegionCtx<'_> {
         dynamic_items(&counter.0, total, chunk, self.items, f);
     }
 
+    /// [`RegionCtx::for_dynamic`] with an early-exit predicate: `stop()`
+    /// is re-checked before claiming each chunk, so a cooperative cancel
+    /// (see [`super::cancel`]) takes effect within one chunk of work
+    /// rather than one full parallel-for. Items already claimed are
+    /// always completed — partial chunks never happen.
+    #[inline]
+    pub fn for_dynamic_until<F, S>(
+        &self,
+        counter: &Counter,
+        total: usize,
+        chunk: usize,
+        stop: S,
+        f: F,
+    ) where
+        F: FnMut(usize),
+        S: Fn() -> bool,
+    {
+        dynamic_items_until(&counter.0, total, chunk, self.items, stop, f);
+    }
+
     /// `schedule(static)` over `0..total`: thread `tid` gets the
     /// contiguous range `[lo, hi)`.
     #[inline]
@@ -193,15 +213,33 @@ impl RegionCtx<'_> {
 }
 
 #[inline]
-fn dynamic_items<F>(counter: &AtomicUsize, total: usize, chunk: usize, items: &AtomicU64, mut f: F)
+fn dynamic_items<F>(counter: &AtomicUsize, total: usize, chunk: usize, items: &AtomicU64, f: F)
 where
     F: FnMut(usize),
+{
+    dynamic_items_until(counter, total, chunk, items, || false, f);
+}
+
+#[inline]
+fn dynamic_items_until<F, S>(
+    counter: &AtomicUsize,
+    total: usize,
+    chunk: usize,
+    items: &AtomicU64,
+    stop: S,
+    mut f: F,
+) where
+    F: FnMut(usize),
+    S: Fn() -> bool,
 {
     let chunk = chunk.max(1);
     let obs = par_obs();
     let mut done = 0u64;
     let mut chunks = 0u64;
     loop {
+        if stop() {
+            break;
+        }
         let start = counter.fetch_add(chunk, Ordering::Relaxed);
         if start >= total {
             break;
@@ -271,6 +309,46 @@ mod tests {
         let marks: Vec<AtomicU64> = (0..total).map(|_| AtomicU64::new(0)).collect();
         pool.for_dynamic(total, 7, |i| {
             marks[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(marks.iter().all(|m| m.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn dynamic_until_stops_between_chunks() {
+        let pool = Pool::new(4);
+        let total = 10_000;
+        let hit = AtomicU64::new(0);
+        let stop_flag = AtomicBool::new(false);
+        let counter = Counter::new();
+        pool.region(|ctx| {
+            ctx.for_dynamic_until(
+                &counter,
+                total,
+                7,
+                || stop_flag.load(Ordering::Relaxed),
+                |i| {
+                    if i == 42 {
+                        stop_flag.store(true, Ordering::Relaxed);
+                    }
+                    hit.fetch_add(1, Ordering::Relaxed);
+                },
+            );
+        });
+        let done = hit.load(Ordering::Relaxed);
+        assert!(done >= 1, "some work ran");
+        assert!(done < total as u64, "stop flag must cut the loop short: {done}");
+    }
+
+    #[test]
+    fn dynamic_until_without_stop_covers_everything() {
+        let pool = Pool::new(3);
+        let total = 1009;
+        let marks: Vec<AtomicU64> = (0..total).map(|_| AtomicU64::new(0)).collect();
+        let counter = Counter::new();
+        pool.region(|ctx| {
+            ctx.for_dynamic_until(&counter, total, 5, || false, |i| {
+                marks[i].fetch_add(1, Ordering::Relaxed);
+            });
         });
         assert!(marks.iter().all(|m| m.load(Ordering::Relaxed) == 1));
     }

@@ -9,8 +9,9 @@
 //! - [`support_naive`] — serial sorted-merge oracle used by tests.
 
 use crate::graph::{EdgeGraph, Graph, Vertex};
+use crate::par::cancel::{CancelToken, Cancelled};
 use crate::par::{Counter, Pool, CHUNK_SUPPORT};
-use crate::par::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use crate::par::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 
 /// Serial oriented triangle count: Σ_u Σ_{v ∈ N⁺(u)} |N⁺(u) ∩ N⁺(v)|
 /// by sorted merge. Exact, allocation-free.
@@ -101,16 +102,49 @@ pub fn count_triangles_par(g: &Graph, pool: &Pool) -> u64 {
 /// each triangle exactly once in the canonical form `v < u < w`, and the
 /// three member edges get one atomic increment each.
 pub fn support_am4(eg: &EdgeGraph, pool: &Pool) -> Vec<AtomicU32> {
+    match support_am4_with(eg, pool, &CancelToken::never()) {
+        Ok(s) => s,
+        // a never-token cannot stop the computation
+        Err(c) => unreachable!("support_am4 cancelled without a token: {c}"),
+    }
+}
+
+/// [`support_am4`] with cooperative cancellation: the token is polled at
+/// every chunk boundary of the dynamic schedule (one vertex chunk ≈ the
+/// paper's `CHUNK_SUPPORT = 10`), so an expired deadline stops the
+/// enumeration within one chunk per thread instead of after Θ(Σ d⁺²)
+/// work.
+pub fn support_am4_with(
+    eg: &EdgeGraph,
+    pool: &Pool,
+    token: &CancelToken,
+) -> Result<Vec<AtomicU32>, Cancelled> {
     let _sp = crate::obs::span("triangle.support_am4");
     let n = eg.n();
     let m = eg.m();
     let g = &eg.g;
     let s: Vec<AtomicU32> = (0..m).map(|_| AtomicU32::new(0)).collect();
     let counter = Counter::new();
+    // one thread observing the token latches `halt` so the other threads
+    // pay a Relaxed load (not an Instant::now) per chunk
+    let halt = AtomicBool::new(false);
+    let stop = || {
+        // ORDERING: Relaxed is enough — halt is a hint that only makes
+        // threads stop claiming chunks; the region join publishes
+        // everything that matters.
+        if halt.load(Ordering::Relaxed) {
+            return true;
+        }
+        if token.should_stop().is_some() {
+            halt.store(true, Ordering::Relaxed);
+            return true;
+        }
+        false
+    };
     pool.region(|ctx| {
         // X[w] = slot+1 of w within u's adjacency, 0 if unmarked
         let mut x = vec![0usize; n];
-        ctx.for_dynamic(&counter, n, CHUNK_SUPPORT, |ui| {
+        ctx.for_dynamic_until(&counter, n, CHUNK_SUPPORT, &stop, |ui| {
             let u = ui as Vertex;
             let (lo, hi) = (g.xadj[ui], g.xadj[ui + 1]);
             let eo_u = eg.eo[ui];
@@ -144,7 +178,10 @@ pub fn support_am4(eg: &EdgeGraph, pool: &Pool) -> Vec<AtomicU32> {
             }
         });
     });
-    s
+    if halt.load(Ordering::Relaxed) {
+        return Err(token.stopped("triangle.support", format!("m={m} support incomplete")));
+    }
+    Ok(s)
 }
 
 /// Rossi's Alg. 2: edge-based parallel support computation. Each thread
@@ -292,6 +329,18 @@ mod tests {
         assert_eq!(s[e12], 2);
         let e01 = eg.edge_id(0, 1).unwrap() as usize;
         assert_eq!(s[e01], 1);
+    }
+
+    #[test]
+    fn support_cancellation_stops_early() {
+        let eg = EdgeGraph::new(gen::erdos_renyi(400, 0.1, 7));
+        // an already-expired deadline must stop before completion
+        let token = CancelToken::with_timeout(Some(std::time::Duration::ZERO));
+        let err = support_am4_with(&eg, &Pool::new(2), &token).unwrap_err();
+        assert_eq!(err.at, "triangle.support");
+        // an inert token yields the exact same result as the plain entry
+        let ok = support_am4_with(&eg, &Pool::new(2), &CancelToken::never()).unwrap();
+        assert_eq!(into_plain(ok), support_naive(&eg));
     }
 
     #[test]

@@ -30,8 +30,8 @@ pub mod external;
 pub use cohen::cohen_ktruss;
 pub use local::local;
 pub use pkt::{
-    pkt, pkt_config, pkt_with_support, pkt_with_support_config, LevelStat, PktConfig, PktStats,
-    TrussResult,
+    pkt, pkt_config, pkt_config_with, pkt_with_support, pkt_with_support_config,
+    pkt_with_support_config_with, LevelStat, PktConfig, PktStats, TrussResult,
 };
 pub use query::TrussIndex;
 pub use ros::ros;

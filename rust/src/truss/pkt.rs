@@ -27,8 +27,9 @@
 
 use crate::graph::{compact_edges, EdgeGraph, EdgeId};
 use crate::obs;
+use crate::par::cancel::{CancelToken, Cancelled};
 use crate::par::{AtomicBitset, AtomicVec, BatchWriter, Counter, Pool, CHUNK_PROCESS};
-use crate::triangle::support_am4;
+use crate::triangle::support_am4_with;
 use crate::par::sync::atomic::{AtomicBool, AtomicI32, AtomicI64, AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 
@@ -127,17 +128,35 @@ pub fn pkt(eg: &EdgeGraph, pool: &Pool) -> TrussResult {
 
 /// Run PKT with an explicit [`PktConfig`].
 pub fn pkt_config(eg: &EdgeGraph, pool: &Pool, cfg: &PktConfig) -> TrussResult {
+    match pkt_config_with(eg, pool, cfg, &CancelToken::never()) {
+        Ok(res) => res,
+        // a never-token cannot stop the decomposition
+        Err(c) => unreachable!("pkt cancelled without a token: {c}"),
+    }
+}
+
+/// [`pkt_config`] with cooperative cancellation: the token is polled at
+/// the support phase's chunk boundaries and at the peel's level
+/// boundaries, the paper's natural synchronization points. On stop the
+/// job unwinds with a [`Cancelled`] error carrying partial progress
+/// (levels completed, edges peeled) instead of a half-built result.
+pub fn pkt_config_with(
+    eg: &EdgeGraph,
+    pool: &Pool,
+    cfg: &PktConfig,
+    token: &CancelToken,
+) -> Result<TrussResult, Cancelled> {
     let sp = obs::span("pkt.support");
-    let s_u32 = support_am4(eg, pool);
+    let s_u32 = support_am4_with(eg, pool, token)?;
     let support_secs = sp.close();
     let s: Vec<AtomicI32> = s_u32
         .into_iter()
         .map(|a| AtomicI32::new(a.into_inner() as i32))
         .collect();
-    let mut res = pkt_with_support_config(eg, pool, s, cfg);
+    let mut res = pkt_with_support_config_with(eg, pool, s, cfg, token)?;
     res.stats.support_secs = support_secs;
     res.stats.total_secs += support_secs;
-    res
+    Ok(res)
 }
 
 /// The peeling phase of PKT, given a precomputed atomic support array.
@@ -154,15 +173,32 @@ pub fn pkt_with_support_config(
     s: Vec<AtomicI32>,
     cfg: &PktConfig,
 ) -> TrussResult {
+    match pkt_with_support_config_with(eg, pool, s, cfg, &CancelToken::never()) {
+        Ok(res) => res,
+        // a never-token cannot stop the peel
+        Err(c) => unreachable!("pkt peel cancelled without a token: {c}"),
+    }
+}
+
+/// The peeling phase with an explicit [`PktConfig`] and a [`CancelToken`]
+/// polled at level boundaries.
+pub fn pkt_with_support_config_with(
+    eg: &EdgeGraph,
+    pool: &Pool,
+    s: Vec<AtomicI32>,
+    cfg: &PktConfig,
+    token: &CancelToken,
+) -> Result<TrussResult, Cancelled> {
     let sp_peel = obs::span("pkt.peel");
     let threshold = cfg.compact_threshold.clamp(0.0, 1.0);
-    let (trussness, mut stats) = if cfg.use_bitsets {
-        peel_driver::<AtomicBitset>(eg, pool, s, threshold)
+    let driven = if cfg.use_bitsets {
+        peel_driver::<AtomicBitset>(eg, pool, s, threshold, token)
     } else {
-        peel_driver::<BoolFlags>(eg, pool, s, threshold)
+        peel_driver::<BoolFlags>(eg, pool, s, threshold, token)
     };
+    let (trussness, mut stats) = driven?;
     stats.total_secs = sp_peel.close();
-    TrussResult { trussness, stats }
+    Ok(TrussResult { trussness, stats })
 }
 
 /// The peel's flag-array abstraction: bit-packed or byte-wide, selected
@@ -237,7 +273,8 @@ fn peel_driver<F: FlagArray>(
     pool: &Pool,
     s: Vec<AtomicI32>,
     threshold: f64,
-) -> (Vec<u32>, PktStats) {
+    token: &CancelToken,
+) -> Result<(Vec<u32>, PktStats), Cancelled> {
     let m_orig = eg.m();
     let shared = PeelShared {
         todo: AtomicI64::new(m_orig as i64),
@@ -261,6 +298,7 @@ fn peel_driver<F: FlagArray>(
     let mut rebuilds = 0u32;
     let mut compact_secs = 0.0f64;
 
+    let mut interrupted = false;
     loop {
         let cur: &EdgeGraph = owned.as_ref().unwrap_or(eg);
         let m = cur.m();
@@ -270,7 +308,9 @@ fn peel_driver<F: FlagArray>(
         let processed = F::with_len(m);
         let in_a = F::with_len(m);
         let in_b = F::with_len(m);
-        run_stage(cur, pool, &s, &processed, &in_a, &in_b, &shared, threshold, start_level);
+        run_stage(
+            cur, pool, &s, &processed, &in_a, &in_b, &shared, threshold, start_level, token,
+        );
 
         if shared.todo.load(Ordering::Acquire) <= 0 {
             // everything in the current graph is peeled; supports are
@@ -282,6 +322,17 @@ fn peel_driver<F: FlagArray>(
                 };
                 final_s[orig] = s[e].load(Ordering::Relaxed);
             }
+            break;
+        }
+
+        // completion wins over a stop observed on the same boundary; a
+        // stage that exits with work remaining did so either for a
+        // compaction rebuild or because tid 0 saw the token fire at a
+        // level boundary — re-checking the token here distinguishes them
+        // (once fired it stays fired: the flag is sticky and a passed
+        // deadline stays passed)
+        if token.should_stop().is_some() {
+            interrupted = true;
             break;
         }
 
@@ -318,6 +369,16 @@ fn peel_driver<F: FlagArray>(
         pkt_obs().rebuilds.inc();
     }
 
+    if interrupted {
+        // partial-stats reporting: how far the peel got before the stop
+        let remaining = shared.todo.load(Ordering::Acquire).max(0) as u64;
+        let levels = shared.level_count.load(Ordering::Relaxed);
+        return Err(token.stopped(
+            "pkt.level",
+            format!("levels={} peeled={}/{}", levels, m_orig as u64 - remaining, m_orig),
+        ));
+    }
+
     let trussness: Vec<u32> = final_s.iter().map(|&v| (v + 2) as u32).collect();
     let stats = PktStats {
         support_secs: 0.0,
@@ -332,12 +393,14 @@ fn peel_driver<F: FlagArray>(
         compact_secs,
         scanned_edges: shared.scanned_edges.into_inner(),
     };
-    (trussness, stats)
+    Ok((trussness, stats))
 }
 
 /// One peel stage: a parallel region running levels on the current graph
-/// until all edges are done (`todo == 0`) or tid 0 requests a compaction
-/// rebuild (live fraction below threshold at a level boundary).
+/// until all edges are done (`todo == 0`), tid 0 requests a compaction
+/// rebuild (live fraction below threshold at a level boundary), or tid 0
+/// observes the cancel token fire (also checked only at level
+/// boundaries, so a level in flight always completes).
 #[allow(clippy::too_many_arguments)]
 fn run_stage<F: FlagArray>(
     eg: &EdgeGraph,
@@ -349,6 +412,7 @@ fn run_stage<F: FlagArray>(
     shared: &PeelShared,
     threshold: f64,
     start_level: i32,
+    token: &CancelToken,
 ) {
     let n = eg.n();
     let m = eg.m();
@@ -357,6 +421,7 @@ fn run_stage<F: FlagArray>(
     let front_b: AtomicVec<EdgeId> = AtomicVec::with_capacity(m);
     let proc_counter = Counter::new();
     let want_compact = AtomicBool::new(false);
+    let want_stop = AtomicBool::new(false);
     let metrics = pkt_obs();
 
     pool.region(|ctx| {
@@ -475,10 +540,17 @@ fn run_stage<F: FlagArray>(
                 {
                     want_compact.store(true, Ordering::Release);
                 }
+                // cancellation checkpoint: same tid-0-decides publish as
+                // the compaction request (one Instant read per level)
+                if token.should_stop().is_some() {
+                    // ORDERING: Release pairs with the Acquire below so
+                    // every thread takes the same exit at this boundary.
+                    want_stop.store(true, Ordering::Release);
+                }
             }
             ctx.barrier();
             level += 1;
-            if want_compact.load(Ordering::Acquire) {
+            if want_compact.load(Ordering::Acquire) || want_stop.load(Ordering::Acquire) {
                 break;
             }
         }
@@ -787,6 +859,36 @@ mod tests {
         );
         assert_eq!(compact.stats.levels, plain.stats.levels, "same level sequence");
         assert!(compact.stats.compact_secs > 0.0);
+    }
+
+    #[test]
+    fn cancellation_stops_support_and_peel() {
+        let eg = EdgeGraph::new(gen::erdos_renyi(200, 0.2, 5));
+        // an expired deadline dies in the support phase (first checkpoint)
+        let token = CancelToken::with_timeout(Some(std::time::Duration::ZERO));
+        let err =
+            pkt_config_with(&eg, &Pool::new(2), &PktConfig::default(), &token).unwrap_err();
+        assert_eq!(err.at, "triangle.support");
+
+        // a token cancelled after support stops at the first peel level
+        // boundary and reports partial progress
+        let s = support_am4_with(&eg, &Pool::new(2), &CancelToken::never()).unwrap();
+        let s: Vec<AtomicI32> =
+            s.into_iter().map(|a| AtomicI32::new(a.into_inner() as i32)).collect();
+        let tok = CancelToken::never();
+        tok.cancel();
+        let err =
+            pkt_with_support_config_with(&eg, &Pool::new(2), s, &PktConfig::default(), &tok)
+                .unwrap_err();
+        assert_eq!(err.at, "pkt.level");
+        assert!(err.partial.contains("levels="), "{}", err.partial);
+        assert_eq!(err.reason, crate::par::CancelReason::Cancelled);
+
+        // an inert token agrees with the plain entry point exactly
+        let r1 = pkt_config_with(&eg, &Pool::new(2), &PktConfig::default(), &CancelToken::never())
+            .unwrap();
+        let r2 = pkt(&eg, &Pool::new(2));
+        assert_eq!(r1.trussness, r2.trussness);
     }
 
     #[test]
