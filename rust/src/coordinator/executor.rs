@@ -33,6 +33,7 @@ use super::pipeline::{run_job_with, JobReport};
 use crate::obs;
 use crate::par::sync::atomic::{AtomicU64, Ordering};
 use crate::par::{CancelReason, CancelToken, Cancelled};
+use crate::truss::UpdateReport;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -158,11 +159,65 @@ impl std::fmt::Display for SubmitError {
     }
 }
 
+/// What a finished job produced. The executor used to be hardwired to
+/// decomposition pipelines; the dynamic-maintenance verbs (LOAD /
+/// INSERT / REMOVE) run arbitrary closures through the same admission
+/// control, deadlines and drain, so the reply channel carries a sum
+/// type instead of a [`JobReport`].
+#[derive(Debug)]
+pub enum JobOutcome {
+    /// A full decomposition ([`Executor::submit`] / DECOMP / HIST).
+    Decomp(JobReport),
+    /// A batch-dynamic update (INSERT / REMOVE).
+    Update(UpdateReport),
+    /// A named graph was decomposed and registered (LOAD).
+    Load(LoadReport),
+}
+
+/// Summary of a LOAD job: the named graph is now resident server-side.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub name: String,
+    pub n: usize,
+    pub m: usize,
+    pub t_max: u32,
+}
+
+impl JobOutcome {
+    /// Unwrap a decomposition outcome; errors on any other variant
+    /// (a protocol-level bug, not a user fault).
+    pub fn decomp(self) -> Result<JobReport> {
+        match self {
+            Self::Decomp(r) => Ok(r),
+            other => Err(anyhow!("internal: expected Decomp outcome, got {other:?}")),
+        }
+    }
+
+    /// Unwrap an update outcome.
+    pub fn update(self) -> Result<UpdateReport> {
+        match self {
+            Self::Update(r) => Ok(r),
+            other => Err(anyhow!("internal: expected Update outcome, got {other:?}")),
+        }
+    }
+
+    /// Unwrap a load outcome.
+    pub fn load(self) -> Result<LoadReport> {
+        match self {
+            Self::Load(r) => Ok(r),
+            other => Err(anyhow!("internal: expected Load outcome, got {other:?}")),
+        }
+    }
+}
+
+/// A queued unit of work: any cancellable closure producing an outcome.
+pub type JobFn = Box<dyn FnOnce(&CancelToken) -> Result<JobOutcome> + Send + 'static>;
+
 struct Job {
     id: u64,
-    cfg: JobConfig,
+    run: JobFn,
     token: CancelToken,
-    reply: std::sync::mpsc::Sender<Result<JobReport>>,
+    reply: std::sync::mpsc::Sender<Result<JobOutcome>>,
 }
 
 struct ExecShared {
@@ -237,17 +292,22 @@ pub struct Executor {
 /// A submitted job: [`JobTicket::wait`] blocks for the reply,
 /// [`JobTicket::cancel`] asks the job to stop at its next boundary.
 pub struct JobTicket {
-    rx: std::sync::mpsc::Receiver<Result<JobReport>>,
+    rx: std::sync::mpsc::Receiver<Result<JobOutcome>>,
     token: CancelToken,
     pub id: u64,
 }
 
 impl JobTicket {
-    pub fn wait(self) -> Result<JobReport> {
+    pub fn wait(self) -> Result<JobOutcome> {
         match self.rx.recv() {
             Ok(res) => res,
             Err(_) => Err(anyhow!("internal: worker dropped the job reply")),
         }
+    }
+
+    /// [`wait`](Self::wait) narrowed to a decomposition job.
+    pub fn wait_decomp(self) -> Result<JobReport> {
+        self.wait().and_then(JobOutcome::decomp)
     }
 
     pub fn cancel(&self) {
@@ -291,21 +351,38 @@ impl Executor {
         }
     }
 
-    /// Non-blocking admission. `Ok` means the job is queued and WILL be
-    /// answered through the ticket (success, error, or cancellation).
+    /// Non-blocking admission for a decomposition. `Ok` means the job
+    /// is queued and WILL be answered through the ticket (success,
+    /// error, or cancellation).
     pub fn submit(&self, cfg: JobConfig) -> Result<JobTicket, SubmitError> {
+        let timeout = cfg.timeout;
+        self.submit_fn(
+            timeout,
+            Box::new(move |token| run_job_with(&cfg, token).map(JobOutcome::Decomp)),
+        )
+    }
+
+    /// Admission for an arbitrary cancellable closure — the dynamic
+    /// verbs (LOAD / INSERT / REMOVE) share the bounded queue, deadline,
+    /// drain and BUSY semantics with decompositions through this path.
+    /// `timeout_secs` overrides the executor-wide default like a job's
+    /// `timeout=` option does.
+    pub fn submit_fn(
+        &self,
+        timeout_secs: Option<f64>,
+        run: JobFn,
+    ) -> Result<JobTicket, SubmitError> {
         // sanitize before Duration::from_secs_f64, which panics on
         // negative/NaN/huge input; the protocol layer validates too but
         // the executor must not trust its callers that far
-        let timeout = cfg
-            .timeout
+        let timeout = timeout_secs
             .filter(|t| t.is_finite() && *t >= 0.0)
             .map(|t| Duration::from_secs_f64(t.min(31_536_000.0)))
             .or(self.job_timeout);
         let token = CancelToken::with_timeout(timeout);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
-        let job = Job { id, cfg, token: token.clone(), reply: reply_tx };
+        let job = Job { id, run, token: token.clone(), reply: reply_tx };
         let m = exec_metrics();
 
         // register the token before enqueueing so a drain-time
@@ -414,7 +491,7 @@ fn worker_loop(rx: &Mutex<Receiver<Job>>, shared: &ExecShared) {
 }
 
 fn run_one(job: Job, shared: &ExecShared) {
-    let Job { id, cfg, token, reply } = job;
+    let Job { id, run, token, reply } = job;
     let m = exec_metrics();
     // inflight up BEFORE queued down, so `inflight + queued` (the drain
     // condition) never dips to zero while this job is between states
@@ -427,7 +504,7 @@ fn run_one(job: Job, shared: &ExecShared) {
         if let Some(f) = &shared.fault {
             f.fire("job.start", &token)?;
         }
-        run_job_with(&cfg, &token)
+        run(&token)
     }));
     drop(guard);
     let result = match caught {
@@ -504,8 +581,27 @@ mod tests {
     fn submit_and_wait_roundtrip() {
         let ex = Executor::new(&quiet_cfg(1, 4));
         let t = ex.submit(job("complete:n=5")).unwrap();
-        let r = t.wait().unwrap();
+        let r = t.wait_decomp().unwrap();
         assert_eq!(r.t_max, 5);
+        ex.shutdown(Duration::from_secs(5));
+    }
+
+    #[test]
+    fn submit_fn_runs_arbitrary_outcomes() {
+        let ex = Executor::new(&quiet_cfg(1, 4));
+        let t = ex
+            .submit_fn(
+                None,
+                Box::new(|_tok| {
+                    Ok(JobOutcome::Load(LoadReport { name: "g".into(), n: 3, m: 2, t_max: 2 }))
+                }),
+            )
+            .unwrap();
+        let l = t.wait().unwrap().load().unwrap();
+        assert_eq!((l.name.as_str(), l.n, l.m, l.t_max), ("g", 3, 2, 2));
+        // variant mismatch surfaces as an internal error, never a panic
+        let t2 = ex.submit(job("complete:n=4")).unwrap();
+        assert!(t2.wait().unwrap().update().is_err());
         ex.shutdown(Duration::from_secs(5));
     }
 
@@ -548,7 +644,7 @@ mod tests {
         let c = err.downcast_ref::<Cancelled>().expect("typed Cancelled");
         assert_eq!(c.reason, CancelReason::Deadline);
         // the worker survived and still serves
-        let r = ex.submit(job("complete:n=4")).unwrap().wait().unwrap();
+        let r = ex.submit(job("complete:n=4")).unwrap().wait_decomp().unwrap();
         assert_eq!(r.t_max, 4);
         ex.shutdown(Duration::from_secs(5));
     }
@@ -594,7 +690,7 @@ mod tests {
         let t = ex.submit(job("complete:n=4")).unwrap();
         ex.shutdown(Duration::from_secs(10));
         // drain waited: the reply is a success, not a cancellation
-        let r = t.wait().unwrap();
+        let r = t.wait_decomp().unwrap();
         assert_eq!(r.t_max, 4);
         assert!(matches!(
             ex.submit(job("complete:n=4")),

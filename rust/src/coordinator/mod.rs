@@ -14,6 +14,9 @@ mod pipeline;
 mod server;
 
 pub use config::{Algorithm, GraphSpec, JobConfig};
-pub use executor::{Executor, ExecutorConfig, FaultAction, FaultSpec, JobTicket, SubmitError};
+pub use executor::{
+    Executor, ExecutorConfig, FaultAction, FaultSpec, JobFn, JobOutcome, JobTicket, LoadReport,
+    SubmitError,
+};
 pub use pipeline::{run_job, run_job_with, JobReport};
 pub use server::{serve, serve_with, Client, ServerConfig, ServerHandle};

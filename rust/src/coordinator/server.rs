@@ -15,10 +15,31 @@
 //!                    [validate=true]    (deep invariant checks, see crate::validate)
 //!                    [timeout=SECS]     (per-job deadline → ERR DEADLINE)
 //! HIST    <graphspec> [...same options]   → trussness histogram
+//! LOAD    <name> <graphspec> [threads=N] [compact=..] [bitsets=..]
+//!                    [timeout=SECS]       → decompose and keep the graph
+//!                                           resident for dynamic updates
+//! INSERT  <name> <u-v[,u-v...]> [validate=true] [timeout=SECS]
+//!                                         → batch edge insertion
+//! REMOVE  <name> <u-v[,u-v...]> [validate=true] [timeout=SECS]
+//!                                         → batch edge deletion
+//! UNLOAD  <name>                          → drop a resident graph
 //! STATUS                                  → jobs, in-flight, queue, conns, uptime
 //! METRICS                                 → OK lines=<N> + N exposition lines
 //! QUIT                                    → close this connection
 //! ```
+//!
+//! LOAD / INSERT / REMOVE run on the same bounded executor as DECOMP,
+//! so admission control, per-job deadlines, cancellation and drain all
+//! apply. A resident graph keeps its **natural vertex ids** (LOAD never
+//! reorders), so the edge lists in update requests refer to the ids of
+//! the loaded graph; inserts may name vertices past the current maximum,
+//! which grows the vertex set. INSERT/REMOVE replies are the
+//! [`crate::truss::UpdateReport`] summary (`OK op=insert requested=..
+//! applied=.. skipped=.. affected=.. ... tmax=..`); dirty batch entries
+//! (self-loops, duplicates, already-present / already-absent edges) are
+//! skipped and counted, never errors. Updates on one graph serialize on
+//! that graph's lock; the lock wait itself polls the job's token, so a
+//! `timeout=` covers queueing on a busy graph too.
 //!
 //! Error replies a client must be ready to handle:
 //!
@@ -41,16 +62,19 @@
 //! tracked by their own counters, not `server_errors_total` — they are
 //! protocol outcomes the client is expected to act on, not faults.
 
-use super::executor::{Executor, ExecutorConfig};
+use super::executor::{Executor, ExecutorConfig, JobOutcome, JobTicket, LoadReport, SubmitError};
 use super::{Algorithm, GraphSpec, JobConfig};
+use crate::graph::Vertex;
 use crate::obs;
 use crate::order::Ordering as VOrdering;
 use crate::par::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use crate::par::Cancelled;
+use crate::par::{CancelToken, Cancelled};
+use crate::truss::DynamicTruss;
 use anyhow::{anyhow, ensure, Context, Result};
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Longest accepted request line. A client streaming an unterminated
@@ -80,6 +104,11 @@ struct ServerState {
     conns: AtomicU64,
     started: Instant,
     executor: Executor,
+    /// Resident graphs for the dynamic verbs, by client-chosen name.
+    /// Double-wrapped: the outer lock guards the registry map, the
+    /// per-graph `Arc<Mutex<..>>` lets an update job hold its graph
+    /// after dispatch returns (and serializes updates per graph).
+    graphs: Arc<Mutex<HashMap<String, Arc<Mutex<DynamicTruss>>>>>,
     workers: usize,
     queue_depth: usize,
 }
@@ -139,6 +168,7 @@ pub fn serve_with(addr: &str, cfg: ServerConfig) -> Result<ServerHandle> {
         conns: AtomicU64::new(0),
         started: Instant::now(),
         executor: Executor::new(&cfg.executor),
+        graphs: Arc::new(Mutex::new(HashMap::new())),
         workers: cfg.executor.workers.max(1),
         queue_depth: cfg.executor.queue_depth.max(1),
     });
@@ -244,6 +274,10 @@ fn canonical_verb(req: &str) -> &'static str {
     match verb.as_str() {
         "DECOMP" => "DECOMP",
         "HIST" => "HIST",
+        "LOAD" => "LOAD",
+        "INSERT" => "INSERT",
+        "REMOVE" => "REMOVE",
+        "UNLOAD" => "UNLOAD",
         "STATUS" => "STATUS",
         "METRICS" => "METRICS",
         "QUIT" => "QUIT",
@@ -272,12 +306,13 @@ fn dispatch(req: &str, state: &ServerState) -> Result<Option<String>> {
     match verb.as_str() {
         "QUIT" => Ok(None),
         "STATUS" => Ok(Some(format!(
-            "OK jobs={} inflight={} queued={} conns={} uptime_secs={:.3} \
+            "OK jobs={} inflight={} queued={} conns={} graphs={} uptime_secs={:.3} \
              threads_default={} workers={} queue_depth={}",
             state.jobs.load(Ordering::Relaxed),
             state.executor.inflight(),
             state.executor.queued(),
             state.conns.load(Ordering::Relaxed),
+            state.graphs.lock().map(|g| g.len()).unwrap_or(0),
             state.started.elapsed().as_secs_f64(),
             crate::par::Pool::default_threads(),
             state.workers,
@@ -295,22 +330,10 @@ fn dispatch(req: &str, state: &ServerState) -> Result<Option<String>> {
         "DECOMP" | "HIST" => {
             let spec_str = parts.next().context("missing graph spec")?;
             let cfg = parse_job(spec_str, parts)?;
-            let ticket = match state.executor.submit(cfg) {
-                Ok(t) => t,
-                // admission refusals are structured protocol replies
-                // the client acts on, not error-counter events
-                Err(e) => return Ok(Some(format!("ERR {e}"))),
+            let report = match wait_mapped(state, state.executor.submit(cfg))? {
+                Err(refusal) => return Ok(Some(refusal)),
+                Ok(outcome) => outcome.decomp()?,
             };
-            let report = match ticket.wait() {
-                Ok(r) => r,
-                Err(e) => {
-                    if let Some(c) = e.downcast_ref::<Cancelled>() {
-                        return Ok(Some(format!("ERR {} {}", c.reason.name(), c.describe())));
-                    }
-                    return Err(e);
-                }
-            };
-            state.jobs.fetch_add(1, Ordering::Relaxed);
             if verb == "DECOMP" {
                 Ok(Some(format!("OK {}", report.summary())))
             } else {
@@ -324,8 +347,193 @@ fn dispatch(req: &str, state: &ServerState) -> Result<Option<String>> {
                 Ok(Some(format!("OK {}", hist.join(","))))
             }
         }
-        _ => Err(anyhow!("unknown verb '{verb}' (DECOMP|HIST|STATUS|METRICS|QUIT)")),
+        "LOAD" => {
+            let name = parts.next().context("missing graph name")?;
+            validate_graph_name(name)?;
+            let spec_str = parts.next().context("missing graph spec")?;
+            let cfg = parse_job(spec_str, parts)?;
+            let timeout = cfg.timeout;
+            let registry = state.graphs.clone();
+            let name = name.to_string();
+            let job_name = name.clone();
+            let sub = state.executor.submit_fn(
+                timeout,
+                Box::new(move |token: &CancelToken| {
+                    // natural vertex order on purpose: update edge lists
+                    // must keep referring to the input's vertex ids
+                    let g = cfg.graph.build()?;
+                    let dt = DynamicTruss::with_config_token(g, cfg.threads, cfg.pkt, token)?;
+                    let rep = LoadReport {
+                        name: job_name.clone(),
+                        n: dt.n(),
+                        m: dt.m(),
+                        t_max: dt.t_max(),
+                    };
+                    let mut map = registry
+                        .lock()
+                        .map_err(|_| anyhow!("graph registry poisoned by an earlier panic"))?;
+                    map.insert(job_name, Arc::new(Mutex::new(dt)));
+                    Ok(JobOutcome::Load(rep))
+                }),
+            );
+            let rep = match wait_mapped(state, sub)? {
+                Err(refusal) => return Ok(Some(refusal)),
+                Ok(outcome) => outcome.load()?,
+            };
+            Ok(Some(format!(
+                "OK name={} n={} m={} tmax={}",
+                rep.name, rep.n, rep.m, rep.t_max
+            )))
+        }
+        "INSERT" | "REMOVE" => {
+            let name = parts.next().context("missing graph name")?;
+            let edges_str = parts.next().context("missing edge list")?;
+            let edges = parse_edges(edges_str)?;
+            let (timeout, validate) = parse_update_opts(parts)?;
+            let handle = state
+                .graphs
+                .lock()
+                .map_err(|_| anyhow!("graph registry poisoned by an earlier panic"))?
+                .get(name)
+                .cloned()
+                .ok_or_else(|| anyhow!("unknown graph '{name}' (LOAD it first)"))?;
+            let insert = verb == "INSERT";
+            let sub = state.executor.submit_fn(
+                timeout,
+                Box::new(move |token: &CancelToken| {
+                    let mut dt = lock_graph(&handle, token)?;
+                    let _guard = validate.then(crate::validate::enable_scoped);
+                    let rep = if insert {
+                        dt.insert_batch_with(&edges, token)?
+                    } else {
+                        dt.remove_batch_with(&edges, token)?
+                    };
+                    Ok(JobOutcome::Update(rep))
+                }),
+            );
+            let rep = match wait_mapped(state, sub)? {
+                Err(refusal) => return Ok(Some(refusal)),
+                Ok(outcome) => outcome.update()?,
+            };
+            Ok(Some(format!("OK {}", rep.summary())))
+        }
+        "UNLOAD" => {
+            let name = parts.next().context("missing graph name")?;
+            let removed = state
+                .graphs
+                .lock()
+                .map_err(|_| anyhow!("graph registry poisoned by an earlier panic"))?
+                .remove(name);
+            match removed {
+                Some(_) => Ok(Some(format!("OK unloaded={name}"))),
+                None => Err(anyhow!("unknown graph '{name}'")),
+            }
+        }
+        _ => Err(anyhow!(
+            "unknown verb '{verb}' (DECOMP|HIST|LOAD|INSERT|REMOVE|UNLOAD|STATUS|METRICS|QUIT)"
+        )),
     }
+}
+
+/// Wait on a submitted job, mapping admission refusals and
+/// cancellations to their structured protocol reply lines.
+/// `Ok(Err(line))` is a refusal the client acts on; `Ok(Ok(..))` is a
+/// finished job (counted in `jobs`); `Err` is a real fault.
+fn wait_mapped(
+    state: &ServerState,
+    sub: std::result::Result<JobTicket, SubmitError>,
+) -> Result<std::result::Result<JobOutcome, String>> {
+    let ticket = match sub {
+        Ok(t) => t,
+        // admission refusals are structured protocol replies the client
+        // acts on, not error-counter events
+        Err(e) => return Ok(Err(format!("ERR {e}"))),
+    };
+    match ticket.wait() {
+        Ok(outcome) => {
+            state.jobs.fetch_add(1, Ordering::Relaxed);
+            Ok(Ok(outcome))
+        }
+        Err(e) => {
+            if let Some(c) = e.downcast_ref::<Cancelled>() {
+                return Ok(Err(format!("ERR {} {}", c.reason.name(), c.describe())));
+            }
+            Err(e)
+        }
+    }
+}
+
+/// Acquire a resident graph's lock from inside an update job, polling
+/// the job token while the graph is busy — a `timeout=` deadline (or an
+/// explicit cancel) therefore also covers waiting on a contended graph.
+fn lock_graph<'a>(
+    handle: &'a Mutex<DynamicTruss>,
+    token: &CancelToken,
+) -> Result<std::sync::MutexGuard<'a, DynamicTruss>> {
+    loop {
+        match handle.try_lock() {
+            Ok(g) => return Ok(g),
+            Err(std::sync::TryLockError::WouldBlock) => {
+                if token.should_stop().is_some() {
+                    return Err(token
+                        .stopped("dynamic.lock", "waiting for graph lock".into())
+                        .into());
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(std::sync::TryLockError::Poisoned(_)) => {
+                return Err(anyhow!("graph state poisoned by an earlier panic"));
+            }
+        }
+    }
+}
+
+/// Graph names become registry keys and reply text — keep them short
+/// and boring so arbitrary client bytes never round-trip into replies.
+fn validate_graph_name(name: &str) -> Result<()> {
+    ensure!(
+        !name.is_empty()
+            && name.len() <= 64
+            && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+        "bad graph name (want 1-64 chars of [A-Za-z0-9_-])"
+    );
+    Ok(())
+}
+
+/// Parse the wire edge-list format `u-v[,u-v...]`, e.g. `0-1,4-2`.
+/// Semantic dirt (self-loops, duplicates, present/absent edges) is NOT
+/// rejected here — the batch ops skip and count it in their report.
+fn parse_edges(s: &str) -> Result<Vec<(Vertex, Vertex)>> {
+    let mut out = Vec::new();
+    for pair in s.split(',').filter(|p| !p.is_empty()) {
+        let (u, v) = pair
+            .split_once('-')
+            .with_context(|| format!("bad edge '{pair}' (want u-v)"))?;
+        let u: Vertex = u.parse().with_context(|| format!("bad vertex '{u}' in '{pair}'"))?;
+        let v: Vertex = v.parse().with_context(|| format!("bad vertex '{v}' in '{pair}'"))?;
+        out.push((u, v));
+    }
+    ensure!(!out.is_empty(), "empty edge list (want u-v[,u-v...])");
+    Ok(out)
+}
+
+/// Options accepted by INSERT / REMOVE (a strict subset of DECOMP's).
+fn parse_update_opts<'a>(opts: impl Iterator<Item = &'a str>) -> Result<(Option<f64>, bool)> {
+    let mut timeout = None;
+    let mut validate = false;
+    for opt in opts {
+        let (k, v) = opt.split_once('=').with_context(|| format!("bad option '{opt}'"))?;
+        match k {
+            "timeout" => {
+                let t: f64 = v.parse().context("bad timeout")?;
+                ensure!(t.is_finite() && t >= 0.0, "bad timeout '{v}' (want seconds >= 0)");
+                timeout = Some(t);
+            }
+            "validate" => validate = v.parse().context("bad validate flag")?,
+            _ => return Err(anyhow!("unknown option '{k}' (timeout|validate)")),
+        }
+    }
+    Ok((timeout, validate))
 }
 
 fn parse_job<'a>(spec_str: &str, opts: impl Iterator<Item = &'a str>) -> Result<JobConfig> {
@@ -569,6 +777,68 @@ mod tests {
         // a generous deadline on a tiny job completes normally
         let r = c.request("DECOMP complete:n=5 threads=1 timeout=30").unwrap();
         assert!(r.starts_with("OK "), "{r}");
+        h.shutdown();
+    }
+
+    #[test]
+    fn server_dynamic_verbs_roundtrip() {
+        let h = serve("127.0.0.1:0").unwrap();
+        let mut c = Client::connect(h.addr).unwrap();
+        let r = c.request("LOAD g1 complete:n=5 threads=1").unwrap();
+        assert!(r.starts_with("OK name=g1 "), "{r}");
+        assert!(r.contains("tmax=5"), "{r}");
+        // complete the 6th vertex into the clique: K5 → K6, tmax 6
+        let r = c.request("INSERT g1 0-5,1-5,2-5,3-5,4-5 validate=true").unwrap();
+        assert!(r.starts_with("OK op=insert "), "{r}");
+        assert!(r.contains("applied=5"), "{r}");
+        assert!(r.contains("tmax=6"), "{r}");
+        // K6 minus one edge peels back to tmax 5
+        let r = c.request("REMOVE g1 0-1 validate=true").unwrap();
+        assert!(r.starts_with("OK op=remove "), "{r}");
+        assert!(r.contains("tmax=5"), "{r}");
+        // the resident graph shows up in STATUS, and updates count as jobs
+        let r = c.request("STATUS").unwrap();
+        assert_eq!(status_field(&r, "graphs"), "1", "{r}");
+        assert_eq!(status_field(&r, "jobs"), "3", "{r}");
+        let r = c.request("UNLOAD g1").unwrap();
+        assert_eq!(r, "OK unloaded=g1");
+        let r = c.request("STATUS").unwrap();
+        assert_eq!(status_field(&r, "graphs"), "0", "{r}");
+        h.shutdown();
+    }
+
+    #[test]
+    fn server_dynamic_error_paths() {
+        let h = serve("127.0.0.1:0").unwrap();
+        let mut c = Client::connect(h.addr).unwrap();
+        // updates need a resident graph
+        assert!(c.request("INSERT nope 0-1").unwrap().starts_with("ERR"));
+        assert!(c.request("REMOVE nope 0-1").unwrap().starts_with("ERR"));
+        assert!(c.request("UNLOAD nope").unwrap().starts_with("ERR"));
+        // malformed requests
+        assert!(c.request("LOAD").unwrap().starts_with("ERR"));
+        assert!(c.request("LOAD bad/name complete:n=4").unwrap().starts_with("ERR"));
+        assert!(c.request("LOAD g complete:n=4 order=xxx").unwrap().starts_with("ERR"));
+        assert!(c.request("INSERT g").unwrap().starts_with("ERR"));
+        let r = c.request("LOAD g complete:n=4 threads=1").unwrap();
+        assert!(r.starts_with("OK name=g "), "{r}");
+        assert!(c.request("INSERT g 0:1").unwrap().starts_with("ERR"));
+        assert!(c.request("INSERT g 0-x").unwrap().starts_with("ERR"));
+        assert!(c.request("INSERT g ,").unwrap().starts_with("ERR"));
+        assert!(c.request("INSERT g 0-1 bogus=1").unwrap().starts_with("ERR"));
+        assert!(c.request("INSERT g 0-1 timeout=-1").unwrap().starts_with("ERR"));
+        // dirty batches are skipped-and-counted, not errors: an edge
+        // already present, its duplicate, and two self-loops
+        let r = c.request("INSERT g 0-1,0-0,2-2,1-0").unwrap();
+        assert!(r.starts_with("OK op=insert "), "{r}");
+        assert!(r.contains("applied=0"), "{r}");
+        assert!(r.contains("skipped=4"), "{r}");
+        // removing an absent edge is equally harmless
+        let r = c.request("REMOVE g 2-9").unwrap();
+        assert!(r.starts_with("OK op=remove "), "{r}");
+        assert!(r.contains("applied=0"), "{r}");
+        // the server is intact after all of that
+        assert!(c.request("STATUS").unwrap().starts_with("OK"));
         h.shutdown();
     }
 }

@@ -472,5 +472,17 @@ mod tests {
         assert!(out.files_scanned > 10, "walked {} files", out.files_scanned);
         let msgs: Vec<String> = out.violations.iter().map(|v| v.to_string()).collect();
         assert!(msgs.is_empty(), "own sources must lint clean:\n{}", msgs.join("\n"));
+        // the dynamic-maintenance module is explicitly in the covered
+        // tree (guards against the walk silently skipping a file) and
+        // lints clean on its own
+        let dynamic = root.join("truss").join("dynamic.rs");
+        assert!(dynamic.is_file(), "{} missing", dynamic.display());
+        let single = lint_tree(&dynamic).unwrap();
+        assert_eq!(single.files_scanned, 1);
+        assert!(
+            single.violations.is_empty(),
+            "truss/dynamic.rs must lint clean:\n{}",
+            single.violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+        );
     }
 }

@@ -4,6 +4,8 @@
 //! pallas decompose <graphspec> [--algo pkt|wc|ros|local] [--threads N]
 //!                  [--order nat|deg|kco] [--hist] [--validate]
 //!                  [--compact-threshold F] [--no-bitsets] [--job-timeout SECS]
+//! pallas update <graphspec> [--insert u-v[,u-v..]] [--remove u-v[,u-v..]]
+//!               [--threads N] [--validate] [--bench]
 //! pallas stats <graphspec>
 //! pallas bench <id|all> [--scale S] [--threads N] [--smoke]
 //! pallas serve [--addr HOST:PORT] [--workers N] [--queue-depth N]
@@ -103,6 +105,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     let rest = &args[1..];
     match cmd.as_str() {
         "decompose" => cmd_decompose(rest),
+        "update" => cmd_update(rest),
         "query" => cmd_query(rest),
         "stats" => cmd_stats(rest),
         "bench" => cmd_bench(rest),
@@ -122,6 +125,7 @@ fn print_help() {
     println!(
         "pallas — shared-memory graph truss decomposition (PKT)\n\n\
          USAGE:\n  pallas decompose <graphspec> [--algo pkt|wc|ros|local] [--threads N] [--order nat|deg|kco] [--hist]\n                   [--compact-threshold F] [--no-bitsets]   (pkt peel tuning)\n                   [--validate]   (deep invariant checks; also via TRUSSX_VALIDATE=1)\n                   [--job-timeout SECS]   (deadline; stops at the next level boundary)\n  \
+         pallas update <graphspec> [--insert u-v[,u-v..]] [--remove u-v[,u-v..]] [--threads N]\n                   [--validate]   (differential check after every batch)\n                   [--bench]      (update cost vs full recompute, batch sizes 1/8/256)\n  \
          pallas stats <graphspec>\n  \
          pallas bench <table1|table2|table3|table4|fig4|fig5|fig6|ablate|pkt|xla|all> [--scale S] [--threads N] [--smoke]\n  \
          pallas query <graphspec> --vertex V [--k K]\n  \
@@ -202,6 +206,96 @@ fn cmd_decompose(args: &[String]) -> Result<()> {
             if c > 0 {
                 println!("  k={k}: {c} edges");
             }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_update(args: &[String]) -> Result<()> {
+    let o = Opts::parse(args, &["validate", "bench"])?;
+    let spec_str = o.positional.first().context("missing graph spec")?;
+    let g = GraphSpec::parse(spec_str)?.build()?;
+    let threads: usize = o
+        .get("threads")
+        .map(|s| s.parse())
+        .transpose()
+        .context("bad --threads")?
+        .unwrap_or_else(Pool::default_threads);
+    // scoped, so the differential oracle runs after every batch below
+    let _validate_guard = o.has("validate").then(trussx::validate::enable_scoped);
+    let mut dt = trussx::truss::DynamicTruss::new(g, threads);
+    println!("loaded: n={} m={} tmax={}", dt.n(), dt.m(), dt.t_max());
+    if o.has("bench") {
+        return bench_update(&mut dt, threads);
+    }
+    let mut any = false;
+    for (k, v) in &o.flags {
+        let rep = match k.as_str() {
+            "insert" => dt.insert_batch(&parse_edge_list(v)?),
+            "remove" => dt.remove_batch(&parse_edge_list(v)?),
+            "threads" => continue,
+            other => bail!("unknown flag --{other}"),
+        };
+        any = true;
+        println!("{}", rep.summary());
+    }
+    anyhow::ensure!(any, "nothing to do (pass --insert/--remove u-v[,u-v...] or --bench)");
+    Ok(())
+}
+
+/// CLI twin of the server's edge wire format: `u-v[,u-v...]`.
+fn parse_edge_list(s: &str) -> Result<Vec<(u32, u32)>> {
+    let mut out = Vec::new();
+    for pair in s.split(',').filter(|p| !p.is_empty()) {
+        let (u, v) = pair
+            .split_once('-')
+            .with_context(|| format!("bad edge '{pair}' (want u-v)"))?;
+        out.push((
+            u.parse().with_context(|| format!("bad vertex '{u}' in '{pair}'"))?,
+            v.parse().with_context(|| format!("bad vertex '{v}' in '{pair}'"))?,
+        ));
+    }
+    anyhow::ensure!(!out.is_empty(), "empty edge list (want u-v[,u-v...])");
+    Ok(out)
+}
+
+/// `--bench`: remove then re-insert spread-out existing edges at batch
+/// sizes 1/8/256, timing each maintained update against a from-scratch
+/// PKT run on the same graph (the EXPERIMENTS.md update-cost table).
+fn bench_update(dt: &mut trussx::truss::DynamicTruss, threads: usize) -> Result<()> {
+    use std::time::Instant;
+    let pool = Pool::new(threads);
+    println!("batch  op      update_secs  full_secs    speedup  affected  changed");
+    for &bs in &[1usize, 8, 256] {
+        let m = dt.m();
+        if m < bs {
+            println!("{bs:<6} (skipped: graph has only {m} edges)");
+            continue;
+        }
+        // a deterministic spread of existing edges: remove, then re-add
+        let batch: Vec<(u32, u32)> = (0..bs).map(|i| dt.eg().el[i * m / bs]).collect();
+        for insert in [false, true] {
+            let t0 = Instant::now();
+            let rep = if insert {
+                dt.insert_batch(&batch)
+            } else {
+                dt.remove_batch(&batch)
+            };
+            let update_secs = t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            let full = trussx::truss::pkt(dt.eg(), &pool);
+            let full_secs = t0.elapsed().as_secs_f64();
+            anyhow::ensure!(
+                full.trussness == dt.trussness(),
+                "maintained trussness diverged from recompute at batch={bs}"
+            );
+            println!(
+                "{bs:<6} {:<7} {update_secs:<12.6} {full_secs:<12.6} {:<8.1} {:<9} {}",
+                rep.op.name(),
+                full_secs / update_secs.max(1e-9),
+                rep.affected,
+                rep.changed,
+            );
         }
     }
     Ok(())
@@ -297,7 +391,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let handle = serve_with(addr, cfg)?;
     println!("pallas server listening on {}", handle.addr);
     println!(
-        "protocol: DECOMP <spec> [algo=..] [threads=..] [order=..] [compact=..] [bitsets=..] [validate=..] [timeout=SECS] | HIST <spec> | STATUS | METRICS | QUIT"
+        "protocol: DECOMP <spec> [algo=..] [threads=..] [order=..] [compact=..] [bitsets=..] [validate=..] [timeout=SECS] | HIST <spec> | LOAD <name> <spec> | INSERT <name> <u-v,..> | REMOVE <name> <u-v,..> | UNLOAD <name> | STATUS | METRICS | QUIT"
     );
     println!(
         "replies:  OK ... | ERR BUSY retry_after_ms=N | ERR DEADLINE ... | ERR CANCELLED ... | ERR ..."

@@ -1,0 +1,884 @@
+//! Batch-dynamic truss maintenance: keep a full PKT decomposition
+//! up to date under edge insertions and deletions without recomputing
+//! from scratch (Jakkula–Karypis streaming/batch truss maintenance,
+//! with the triangle-locality bounds of Wang–Cheng).
+//!
+//! [`DynamicTruss`] owns the CSR ([`EdgeGraph`]), the per-edge support
+//! and the per-edge trussness of the current graph. A batch update runs
+//! in four phases:
+//!
+//! 1. **normalize + rebuild** — canonicalize the batch (u < v, drop
+//!    self-loops and duplicates, skip already-present inserts /
+//!    already-absent removes) and rebuild the CSR with the surviving
+//!    edits; old trussness rides across by a linear merge of the two
+//!    lexicographic edge lists.
+//! 2. **affected region** — a BFS over *triangle adjacency* (two edges
+//!    are adjacent iff they close a triangle) from the touched edges.
+//!    The cascade lemma bounds it: an edge's trussness changes only if
+//!    it shares a triangle with an edited edge or with another changed
+//!    edge, so the BFS expands only through change candidates. Two
+//!    pruning rules cut candidates provably unaffected:
+//!    - *delete*: an edge with `t > max t(deleted)` keeps its old-graph
+//!      k-truss intact (no deleted edge was in it), so it cannot drop;
+//!    - *insert*: a changed edge ends in a k-truss through an inserted
+//!      edge `d`, so `k ≤ supp(d) + 2`; anything already at or above
+//!      `K = max_d supp(d) + 2` cannot rise.
+//!    Pruned neighbors of the region become frozen *context*.
+//! 3. **region re-peel** — the affected + context edges are compacted
+//!    into a sub-[`EdgeGraph`] ([`compact_edges`]); affected supports
+//!    are recounted there (all their triangles are inside the region by
+//!    construction), context edges are pinned at `t - 2` and marked in
+//!    a frozen [`AtomicBitset`] the peel never decrements. The standard
+//!    staged `peel_driver` then replays the peel: context edges enter
+//!    the frontier at their known level and exert exactly the influence
+//!    they have in a full peel.
+//! 4. **write-back** — new trussness for affected edges, incremental
+//!    support deltas (one per created/destroyed triangle, claimed by
+//!    the lowest touched edge id so shared triangles count once), and
+//!    an [`UpdateReport`] delta summary.
+//!
+//! Every update runs under a `dynamic.insert` / `dynamic.remove` obs
+//! span and bumps `dynamic_updates_total{op=..}` and
+//! `dynamic_affected_edges_total`. With [`crate::validate`] enabled the
+//! maintained state is checked against a from-scratch recompute
+//! ([`crate::validate::check_dynamic`]) after every batch.
+
+use super::pkt::{pkt_region_peel, pkt_with_support_config_with, PktConfig};
+use crate::graph::{compact_edges, EdgeGraph, EdgeId, Graph, GraphBuilder, Vertex};
+use crate::obs;
+use crate::par::cancel::{CancelToken, Cancelled};
+use crate::par::sync::atomic::{AtomicI32, Ordering};
+use crate::par::{AtomicBitset, Pool};
+use crate::triangle::support_am4_with;
+use std::collections::VecDeque;
+use std::sync::OnceLock;
+
+/// Which way a batch moved the graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateOp {
+    Insert,
+    Remove,
+}
+
+impl UpdateOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Insert => "insert",
+            Self::Remove => "remove",
+        }
+    }
+}
+
+/// Delta report of one batch update (the server's `OK` line and the
+/// CLI's per-batch output both render [`UpdateReport::summary`]).
+#[derive(Clone, Debug)]
+pub struct UpdateReport {
+    pub op: UpdateOp,
+    /// Raw batch size as submitted.
+    pub requested: usize,
+    /// Edges actually inserted/removed after normalization.
+    pub applied: usize,
+    /// Duplicates, self-loops, already-present (insert) or
+    /// already-absent (remove) entries.
+    pub skipped: usize,
+    /// Edges whose trussness was recomputed (the affected region).
+    pub affected: usize,
+    /// Frozen boundary edges pinned at their known trussness.
+    pub context: usize,
+    /// Edges whose trussness actually changed (applied edges included).
+    pub changed: usize,
+    /// Peel levels re-run over the region (0 when nothing re-peeled).
+    pub levels: u32,
+    /// Maximum trussness after the update.
+    pub t_max: u32,
+    pub n: usize,
+    pub m: usize,
+    pub secs: f64,
+}
+
+impl UpdateReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "op={} requested={} applied={} skipped={} affected={} context={} \
+             changed={} levels={} tmax={} n={} m={} secs={:.6}",
+            self.op.name(),
+            self.requested,
+            self.applied,
+            self.skipped,
+            self.affected,
+            self.context,
+            self.changed,
+            self.levels,
+            self.t_max,
+            self.n,
+            self.m,
+            self.secs
+        )
+    }
+}
+
+/// Cached registry handles (same pattern as `pkt_obs`).
+struct DynObs {
+    inserts: obs::Counter,
+    removes: obs::Counter,
+    affected: obs::Counter,
+}
+
+fn dyn_obs() -> &'static DynObs {
+    static OBS: OnceLock<DynObs> = OnceLock::new();
+    OBS.get_or_init(|| {
+        let r = obs::global();
+        DynObs {
+            inserts: r.counter("dynamic_updates_total", &[("op", "insert")]),
+            removes: r.counter("dynamic_updates_total", &[("op", "remove")]),
+            affected: r.counter("dynamic_affected_edges_total", &[]),
+        }
+    })
+}
+
+/// BFS edge states over the *new* graph's edge ids.
+const UNSEEN: u8 = 0;
+/// In the affected region: trussness is recomputed by the region peel.
+const AFFECTED: u8 = 1;
+/// Region boundary: present in the re-peel, pinned at old trussness.
+const CONTEXT: u8 = 2;
+
+/// Poll the cancel token every this many BFS expansions.
+const BFS_POLL: usize = 4096;
+
+/// A truss decomposition that stays correct under batch edge updates.
+pub struct DynamicTruss {
+    eg: EdgeGraph,
+    support: Vec<u32>,
+    trussness: Vec<u32>,
+    cfg: PktConfig,
+    threads: usize,
+}
+
+impl DynamicTruss {
+    /// Full PKT run with default tuning; the result seeds the
+    /// maintained state.
+    pub fn new(g: Graph, threads: usize) -> Self {
+        Self::with_config(g, threads, PktConfig::default())
+    }
+
+    /// [`DynamicTruss::new`] with explicit peel tuning (the same knobs
+    /// apply to the initial run and every region re-peel).
+    pub fn with_config(g: Graph, threads: usize, cfg: PktConfig) -> Self {
+        match Self::with_config_token(g, threads, cfg, &CancelToken::never()) {
+            Ok(s) => s,
+            // a never-token cannot stop the initial decomposition
+            Err(c) => unreachable!("dynamic init cancelled without a token: {c}"),
+        }
+    }
+
+    /// Cancellable construction: the token is polled at the usual
+    /// support/peel boundaries of the initial full run.
+    pub fn with_config_token(
+        g: Graph,
+        threads: usize,
+        cfg: PktConfig,
+        token: &CancelToken,
+    ) -> Result<Self, Cancelled> {
+        let eg = EdgeGraph::new(g);
+        let pool = Pool::new(threads);
+        let sp = obs::span("pkt.support");
+        let sup = support_am4_with(&eg, &pool, token)?;
+        sp.close();
+        let support: Vec<u32> = sup.into_iter().map(|a| a.into_inner()).collect();
+        let s: Vec<AtomicI32> =
+            support.iter().map(|&v| AtomicI32::new(v as i32)).collect();
+        let res = pkt_with_support_config_with(&eg, &pool, s, &cfg, token)?;
+        Ok(Self { eg, support, trussness: res.trussness, cfg, threads })
+    }
+
+    pub fn eg(&self) -> &EdgeGraph {
+        &self.eg
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.eg.g
+    }
+
+    /// Maintained trussness per edge id of the *current* graph.
+    pub fn trussness(&self) -> &[u32] {
+        &self.trussness
+    }
+
+    /// Maintained triangle support per edge id of the current graph.
+    pub fn support(&self) -> &[u32] {
+        &self.support
+    }
+
+    pub fn t_max(&self) -> u32 {
+        super::max_trussness(&self.trussness)
+    }
+
+    pub fn n(&self) -> usize {
+        self.eg.n()
+    }
+
+    pub fn m(&self) -> usize {
+        self.eg.m()
+    }
+
+    /// Insert a batch of edges. Self-loops, duplicates and
+    /// already-present edges are skipped (counted in the report).
+    pub fn insert_batch(&mut self, batch: &[(Vertex, Vertex)]) -> UpdateReport {
+        match self.insert_batch_with(batch, &CancelToken::never()) {
+            Ok(r) => r,
+            Err(c) => unreachable!("insert cancelled without a token: {c}"),
+        }
+    }
+
+    /// [`DynamicTruss::insert_batch`] with cooperative cancellation. On
+    /// `Err` the maintained state is unchanged (all mutation happens in
+    /// a final write-back after the region peel succeeds).
+    pub fn insert_batch_with(
+        &mut self,
+        batch: &[(Vertex, Vertex)],
+        token: &CancelToken,
+    ) -> Result<UpdateReport, Cancelled> {
+        let nb = batch.len().to_string();
+        let sp = obs::span_with("dynamic.insert", &[("batch", &nb)]);
+        dyn_obs().inserts.inc();
+        if token.should_stop().is_some() {
+            return Err(token.stopped("dynamic.insert", "before batch".into()));
+        }
+
+        // -- normalize: canonical, deduplicated, not already present --
+        let mut add: Vec<(Vertex, Vertex)> = Vec::with_capacity(batch.len());
+        let old_n = self.eg.n() as Vertex;
+        for &(a, b) in batch {
+            if a == b {
+                continue;
+            }
+            let (u, v) = if a < b { (a, b) } else { (b, a) };
+            // endpoints beyond the current vertex set are new vertices
+            if v < old_n && self.eg.edge_id(u, v).is_some() {
+                continue;
+            }
+            add.push((u, v));
+        }
+        add.sort_unstable();
+        add.dedup();
+        if add.is_empty() {
+            return Ok(self.noop_report(UpdateOp::Insert, batch.len(), sp.close()));
+        }
+        let applied = add.len();
+
+        // -- rebuild the CSR with the new edges --
+        let sp_build = obs::span("dynamic.rebuild");
+        let mut edges: Vec<(Vertex, Vertex)> =
+            Vec::with_capacity(self.eg.m() + applied);
+        edges.extend_from_slice(&self.eg.el);
+        edges.extend_from_slice(&add);
+        let new_g =
+            GraphBuilder::new().num_vertices(self.eg.n()).edges_vec(edges).build();
+        let new_eg = EdgeGraph::new(new_g);
+        sp_build.close();
+        let m_new = new_eg.m();
+
+        // -- carry old state across (both edge lists are lexicographic,
+        // and the new list is a strict superset: one linear merge) --
+        let mut t_prev = vec![0u32; m_new];
+        let mut sup = vec![0u32; m_new];
+        let mut inserted = vec![false; m_new];
+        let mut oi = 0usize;
+        for (e, &uv) in new_eg.el.iter().enumerate() {
+            if oi < self.eg.m() && self.eg.el[oi] == uv {
+                t_prev[e] = self.trussness[oi];
+                sup[e] = self.support[oi];
+                oi += 1;
+            } else {
+                inserted[e] = true;
+            }
+        }
+        debug_assert_eq!(oi, self.eg.m(), "every old edge survives an insert");
+
+        // -- incremental support: each triangle through an inserted edge
+        // is new; the lowest inserted edge id in it claims it so shared
+        // triangles count once. Also derives the insert prune bound
+        // K = max supp(inserted) + 2: nothing at or above K can rise. --
+        let mut seeds: Vec<EdgeId> = Vec::with_capacity(applied);
+        let mut k_bound = 2u32;
+        for (e, ins) in inserted.iter().enumerate() {
+            if !ins {
+                continue;
+            }
+            let d = e as EdgeId;
+            seeds.push(d);
+            let mut supp_d = 0u32;
+            common_triangles(&new_eg, d, |e2, e3| {
+                supp_d += 1;
+                let i2 = inserted[e2 as usize];
+                let i3 = inserted[e3 as usize];
+                if (i2 && e2 < d) || (i3 && e3 < d) {
+                    return; // a smaller inserted edge claims this triangle
+                }
+                if !i2 {
+                    sup[e2 as usize] += 1;
+                }
+                if !i3 {
+                    sup[e3 as usize] += 1;
+                }
+            });
+            sup[e] = supp_d;
+            k_bound = k_bound.max(supp_d + 2);
+        }
+
+        // -- affected region + frozen context --
+        let state = self.affected_region(&new_eg, &seeds, &t_prev, token, |t| t >= k_bound)?;
+
+        self.repeel_and_commit(
+            UpdateOp::Insert,
+            new_eg,
+            state,
+            t_prev,
+            sup,
+            Some(inserted),
+            batch.len(),
+            applied,
+            sp,
+            token,
+        )
+    }
+
+    /// Remove a batch of edges. Self-loops, duplicates and absent edges
+    /// are skipped (counted in the report). Vertices are never removed.
+    pub fn remove_batch(&mut self, batch: &[(Vertex, Vertex)]) -> UpdateReport {
+        match self.remove_batch_with(batch, &CancelToken::never()) {
+            Ok(r) => r,
+            Err(c) => unreachable!("remove cancelled without a token: {c}"),
+        }
+    }
+
+    /// [`DynamicTruss::remove_batch`] with cooperative cancellation.
+    pub fn remove_batch_with(
+        &mut self,
+        batch: &[(Vertex, Vertex)],
+        token: &CancelToken,
+    ) -> Result<UpdateReport, Cancelled> {
+        let nb = batch.len().to_string();
+        let sp = obs::span_with("dynamic.remove", &[("batch", &nb)]);
+        dyn_obs().removes.inc();
+        if token.should_stop().is_some() {
+            return Err(token.stopped("dynamic.remove", "before batch".into()));
+        }
+
+        // -- normalize to old edge ids --
+        let m_old = self.eg.m();
+        let old_n = self.eg.n() as Vertex;
+        let mut deleted = vec![false; m_old];
+        let mut applied = 0usize;
+        let mut max_deleted_t = 0u32;
+        for &(a, b) in batch {
+            if a == b {
+                continue;
+            }
+            let (u, v) = if a < b { (a, b) } else { (b, a) };
+            if v >= old_n {
+                continue; // endpoint outside the graph: nothing to remove
+            }
+            let Some(d) = self.eg.edge_id(u, v) else { continue };
+            if !deleted[d as usize] {
+                deleted[d as usize] = true;
+                applied += 1;
+                max_deleted_t = max_deleted_t.max(self.trussness[d as usize]);
+            }
+        }
+        if applied == 0 {
+            return Ok(self.noop_report(UpdateOp::Remove, batch.len(), sp.close()));
+        }
+
+        // -- rebuild the CSR on the survivors (n is preserved) --
+        let sp_build = obs::span("dynamic.rebuild");
+        let edges: Vec<(Vertex, Vertex)> = self
+            .eg
+            .el
+            .iter()
+            .enumerate()
+            .filter(|&(e, _)| !deleted[e])
+            .map(|(_, &uv)| uv)
+            .collect();
+        let new_g =
+            GraphBuilder::new().num_vertices(self.eg.n()).edges_vec(edges).build();
+        let new_eg = EdgeGraph::new(new_g);
+        sp_build.close();
+        let m_new = new_eg.m();
+        debug_assert_eq!(m_new, m_old - applied);
+
+        // -- carry old state across; survivors keep lexicographic order
+        // so old id → new id is a filtering merge --
+        let mut t_prev = vec![0u32; m_new];
+        let mut sup = vec![0u32; m_new];
+        let mut old_to_new = vec![EdgeId::MAX; m_old];
+        let mut ne = 0usize;
+        for (oe, del) in deleted.iter().enumerate() {
+            if *del {
+                continue;
+            }
+            debug_assert_eq!(new_eg.el[ne], self.eg.el[oe]);
+            t_prev[ne] = self.trussness[oe];
+            sup[ne] = self.support[oe];
+            old_to_new[oe] = ne as EdgeId;
+            ne += 1;
+        }
+        debug_assert_eq!(ne, m_new);
+
+        // -- incremental support + seeds: every OLD-graph triangle
+        // through a deleted edge dies; the lowest deleted edge id in it
+        // claims it. Surviving partners lose one support each and seed
+        // the affected BFS (unless pruned: an edge with trussness above
+        // every deleted edge's cannot drop — its old k-truss is intact).
+        let mut seeds: Vec<EdgeId> = Vec::new();
+        let mut seeded = vec![false; m_new];
+        for (oe, del) in deleted.iter().enumerate() {
+            if !del {
+                continue;
+            }
+            let d = oe as EdgeId;
+            common_triangles(&self.eg, d, |e2, e3| {
+                let d2 = deleted[e2 as usize];
+                let d3 = deleted[e3 as usize];
+                if (d2 && e2 < d) || (d3 && e3 < d) {
+                    return; // a smaller deleted edge claims this triangle
+                }
+                for f in [e2, e3] {
+                    if deleted[f as usize] {
+                        continue;
+                    }
+                    let nf = old_to_new[f as usize] as usize;
+                    sup[nf] -= 1;
+                    if !seeded[nf] && self.trussness[f as usize] <= max_deleted_t {
+                        seeded[nf] = true;
+                        seeds.push(nf as EdgeId);
+                    }
+                }
+            });
+        }
+
+        // -- affected region + frozen context --
+        let state =
+            self.affected_region(&new_eg, &seeds, &t_prev, token, |t| t > max_deleted_t)?;
+
+        self.repeel_and_commit(
+            UpdateOp::Remove,
+            new_eg,
+            state,
+            t_prev,
+            sup,
+            None,
+            batch.len(),
+            applied,
+            sp,
+            token,
+        )
+    }
+
+    /// Check the maintained state against a from-scratch recompute and
+    /// a serial support recount ([`crate::validate::check_dynamic`]).
+    pub fn validate_maintained(&self) -> crate::validate::Report {
+        let mut rep = crate::validate::Report::new();
+        crate::validate::check_dynamic(
+            &self.eg,
+            &self.support,
+            &self.trussness,
+            &Pool::new(self.threads),
+            &self.cfg,
+            &mut rep,
+        );
+        rep
+    }
+
+    /// Triangle-adjacency BFS from `seeds` over the new graph: the
+    /// closure of change candidates. `pruned(t_prev)` decides that an
+    /// edge provably cannot change — it becomes frozen [`CONTEXT`]
+    /// (present in the re-peel, pinned, never expanded); everything
+    /// else joins [`AFFECTED`] and keeps expanding. Soundness rests on
+    /// the cascade lemma (module docs): every changed edge shares a
+    /// triangle with an edited or another changed edge, so the closure
+    /// over non-pruned edges covers all of them.
+    fn affected_region(
+        &self,
+        new_eg: &EdgeGraph,
+        seeds: &[EdgeId],
+        t_prev: &[u32],
+        token: &CancelToken,
+        pruned: impl Fn(u32) -> bool,
+    ) -> Result<Vec<u8>, Cancelled> {
+        let sp = obs::span("dynamic.affected");
+        let mut state = vec![UNSEEN; new_eg.m()];
+        let mut queue: VecDeque<EdgeId> = VecDeque::with_capacity(seeds.len());
+        for &s in seeds {
+            state[s as usize] = AFFECTED;
+            queue.push_back(s);
+        }
+        let mut expansions = 0usize;
+        while let Some(e) = queue.pop_front() {
+            expansions += 1;
+            if expansions % BFS_POLL == 0 && token.should_stop().is_some() {
+                return Err(token
+                    .stopped("dynamic.affected", format!("expanded={expansions}")));
+            }
+            common_triangles(new_eg, e, |e2, e3| {
+                for f in [e2, e3] {
+                    let fi = f as usize;
+                    if state[fi] != UNSEEN {
+                        continue;
+                    }
+                    if pruned(t_prev[fi]) {
+                        state[fi] = CONTEXT;
+                    } else {
+                        state[fi] = AFFECTED;
+                        queue.push_back(f);
+                    }
+                }
+            });
+        }
+        sp.close();
+        Ok(state)
+    }
+
+    /// Phases 3 + 4: compact the region, recount affected supports,
+    /// pin + freeze context edges, re-peel, then commit the new state.
+    /// Nothing in `self` mutates until every fallible step has passed.
+    #[allow(clippy::too_many_arguments)]
+    fn repeel_and_commit(
+        &mut self,
+        op: UpdateOp,
+        new_eg: EdgeGraph,
+        state: Vec<u8>,
+        t_prev: Vec<u32>,
+        sup: Vec<u32>,
+        inserted: Option<Vec<bool>>,
+        requested: usize,
+        applied: usize,
+        sp: obs::Span,
+        token: &CancelToken,
+    ) -> Result<UpdateReport, Cancelled> {
+        let affected = state.iter().filter(|&&s| s == AFFECTED).count();
+        let context = state.iter().filter(|&&s| s == CONTEXT).count();
+        dyn_obs().affected.add(affected as u64);
+
+        let mut t_new = t_prev;
+        let mut changed = 0usize;
+        let mut levels = 0u32;
+        if affected > 0 {
+            let pool = Pool::new(self.threads);
+            let comp = compact_edges(&new_eg, &pool, |e| state[e as usize] != UNSEEN);
+            let rsup = support_am4_with(&comp.eg, &pool, token)?;
+            let rm = comp.eg.m();
+            let frozen = AtomicBitset::new(rm);
+            let s: Vec<AtomicI32> = (0..rm)
+                .map(|r| {
+                    let full = comp.old_of_new[r] as usize;
+                    if state[full] == CONTEXT {
+                        frozen.set(r);
+                        // pinned at its known level: trussness - 2
+                        AtomicI32::new(t_new[full] as i32 - 2)
+                    } else {
+                        // affected: all of its new-graph triangles are in
+                        // the region, so the region recount is exact
+                        AtomicI32::new(rsup[r].load(Ordering::Relaxed) as i32)
+                    }
+                })
+                .collect();
+            let res = pkt_region_peel(&comp.eg, &pool, s, frozen, &self.cfg, token)?;
+            levels = res.stats.levels;
+            for r in 0..rm {
+                let full = comp.old_of_new[r] as usize;
+                if state[full] == AFFECTED {
+                    let fresh_edge =
+                        inserted.as_ref().is_some_and(|ins| ins[full]);
+                    if fresh_edge || res.trussness[r] != t_new[full] {
+                        changed += 1;
+                    }
+                    t_new[full] = res.trussness[r];
+                } else {
+                    debug_assert_eq!(
+                        res.trussness[r],
+                        t_new[full],
+                        "frozen context edge must re-peel to its pinned trussness"
+                    );
+                }
+            }
+        } else if let Some(ins) = &inserted {
+            // no region peel, but brand-new edges still need a value;
+            // with no triangles (affected would be nonempty otherwise,
+            // since inserted edges always seed) trussness is 2
+            for (e, i) in ins.iter().enumerate() {
+                if *i {
+                    t_new[e] = 2;
+                    changed += 1;
+                }
+            }
+        }
+
+        self.eg = new_eg;
+        self.trussness = t_new;
+        self.support = sup;
+
+        let report = UpdateReport {
+            op,
+            requested,
+            applied,
+            skipped: requested - applied,
+            affected,
+            context,
+            changed,
+            levels,
+            t_max: self.t_max(),
+            n: self.eg.n(),
+            m: self.eg.m(),
+            secs: sp.close(),
+        };
+        if crate::validate::enabled() {
+            self.validate_maintained().panic_if_failed(match op {
+                UpdateOp::Insert => "dynamic.insert",
+                UpdateOp::Remove => "dynamic.remove",
+            });
+        }
+        Ok(report)
+    }
+
+    /// Report for a batch that normalized to nothing.
+    fn noop_report(&self, op: UpdateOp, requested: usize, secs: f64) -> UpdateReport {
+        UpdateReport {
+            op,
+            requested,
+            applied: 0,
+            skipped: requested,
+            affected: 0,
+            context: 0,
+            changed: 0,
+            levels: 0,
+            t_max: self.t_max(),
+            n: self.eg.n(),
+            m: self.eg.m(),
+            secs,
+        }
+    }
+}
+
+/// Enumerate the triangles through edge `e = <u, v>` by a sorted merge
+/// of the two endpoint rows; yields the other two edge ids `(e2, e3)`
+/// with `e2` on the `u` side and `e3` on the `v` side. Serial — the
+/// affected BFS visits each region edge once and the merge touches
+/// `d(u) + d(v)` entries, so this stays linear in region volume.
+fn common_triangles(eg: &EdgeGraph, e: EdgeId, mut f: impl FnMut(EdgeId, EdgeId)) {
+    let g = &eg.g;
+    let (u, v) = eg.el[e as usize];
+    let (mut a, ahi) = (g.xadj[u as usize], g.xadj[u as usize + 1]);
+    let (mut b, bhi) = (g.xadj[v as usize], g.xadj[v as usize + 1]);
+    while a < ahi && b < bhi {
+        let (wu, wv) = (g.adj[a], g.adj[b]);
+        match wu.cmp(&wv) {
+            std::cmp::Ordering::Less => a += 1,
+            std::cmp::Ordering::Greater => b += 1,
+            std::cmp::Ordering::Equal => {
+                f(eg.eid[a], eg.eid[b]);
+                a += 1;
+                b += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::truss::pkt;
+    use crate::util::forall;
+
+    fn fresh(eg: &EdgeGraph, threads: usize) -> Vec<u32> {
+        pkt(eg, &Pool::new(threads)).trussness
+    }
+
+    /// Assert the maintained state equals a from-scratch recompute on
+    /// the same graph (ids align because both sides are lexicographic).
+    fn assert_oracle(dt: &DynamicTruss) {
+        let want = fresh(dt.eg(), 2);
+        assert_eq!(dt.trussness(), &want[..], "maintained trussness diverged");
+        let rep = dt.validate_maintained();
+        assert!(rep.ok(), "{}", rep.error().unwrap_or_default());
+    }
+
+    #[test]
+    fn insert_builds_triangle() {
+        // path 0-1-2: all trussness 2; closing the triangle lifts all
+        // three edges to 3
+        let g = GraphBuilder::new().edges(&[(0, 1), (1, 2)]).build();
+        let mut dt = DynamicTruss::new(g, 2);
+        assert!(dt.trussness().iter().all(|&t| t == 2));
+        let r = dt.insert_batch(&[(0, 2)]);
+        assert_eq!(r.applied, 1);
+        assert_eq!(r.t_max, 3);
+        assert!(dt.trussness().iter().all(|&t| t == 3), "{:?}", dt.trussness());
+        assert_oracle(&dt);
+    }
+
+    #[test]
+    fn remove_breaks_clique() {
+        let mut edges = vec![];
+        for u in 0..5u32 {
+            for v in (u + 1)..5 {
+                edges.push((u, v));
+            }
+        }
+        let g = GraphBuilder::new().edges_vec(edges).build();
+        let mut dt = DynamicTruss::new(g, 2);
+        assert_eq!(dt.t_max(), 5);
+        let r = dt.remove_batch(&[(0, 1)]);
+        assert_eq!(r.applied, 1);
+        assert_eq!(r.m, 9);
+        assert_oracle(&dt);
+    }
+
+    #[test]
+    fn dirty_batches_are_skipped() {
+        let g = gen::complete(4);
+        let mut dt = DynamicTruss::new(g, 1);
+        // self-loop, duplicate, already present
+        let r = dt.insert_batch(&[(0, 0), (0, 1), (1, 0), (5, 6), (5, 6), (6, 5)]);
+        assert_eq!(r.applied, 1, "{}", r.summary());
+        assert_eq!(r.skipped, 5);
+        assert_eq!(r.m, 7);
+        assert_oracle(&dt);
+        // absent edge, self-loop, duplicate
+        let r = dt.remove_batch(&[(0, 9), (2, 2), (5, 6), (6, 5)]);
+        assert_eq!(r.applied, 1, "{}", r.summary());
+        assert_eq!(r.skipped, 3);
+        assert_oracle(&dt);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let g = gen::complete(4);
+        let mut dt = DynamicTruss::new(g, 1);
+        let before = dt.trussness().to_vec();
+        let r = dt.insert_batch(&[]);
+        assert_eq!((r.applied, r.skipped, r.changed), (0, 0, 0));
+        let r = dt.remove_batch(&[(0, 0)]);
+        assert_eq!((r.applied, r.skipped), (0, 1));
+        assert_eq!(dt.trussness(), &before[..]);
+    }
+
+    #[test]
+    fn insert_grows_vertex_set() {
+        let g = gen::complete(3);
+        let mut dt = DynamicTruss::new(g, 1);
+        let r = dt.insert_batch(&[(2, 7)]);
+        assert_eq!(r.applied, 1);
+        assert_eq!(r.n, 8);
+        assert_oracle(&dt);
+    }
+
+    #[test]
+    fn remove_everything() {
+        let g = gen::complete(4);
+        let mut dt = DynamicTruss::new(g, 2);
+        let all: Vec<_> = dt.eg().el.clone();
+        let r = dt.remove_batch(&all);
+        assert_eq!(r.applied, 6);
+        assert_eq!(r.m, 0);
+        assert_eq!(dt.trussness().len(), 0);
+        assert_eq!(dt.n(), 4, "vertices are never removed");
+    }
+
+    #[test]
+    fn interleaved_batches_match_oracle() {
+        forall("dynamic-interleaved", 8, |rng| {
+            let n = rng.range(8, 40);
+            let g = gen::erdos_renyi(n, 0.2, rng.next_u64());
+            let mut dt = DynamicTruss::new(g, 2);
+            for _ in 0..4 {
+                let mut batch = vec![];
+                for _ in 0..rng.range(1, 9) {
+                    let u = rng.below(n as u64) as Vertex;
+                    let v = rng.below(n as u64) as Vertex;
+                    batch.push((u, v));
+                }
+                if rng.chance(0.5) {
+                    dt.insert_batch(&batch);
+                } else {
+                    dt.remove_batch(&batch);
+                }
+                assert_oracle(&dt);
+            }
+        });
+    }
+
+    #[test]
+    fn frozen_context_stays_pinned() {
+        // two K5s sharing nothing, bridged by one edge: deleting inside
+        // one clique must not touch the other (it lands in context or
+        // stays unseen, and its trussness is carried, not recomputed)
+        let mut edges = vec![];
+        for u in 0..5u32 {
+            for v in (u + 1)..5 {
+                edges.push((u, v));
+                edges.push((u + 5, v + 5));
+            }
+        }
+        edges.push((4, 5));
+        let g = GraphBuilder::new().edges_vec(edges).build();
+        let mut dt = DynamicTruss::new(g, 2);
+        let r = dt.remove_batch(&[(0, 1)]);
+        assert!(r.affected < dt.m(), "locality: {}", r.summary());
+        assert_oracle(&dt);
+    }
+
+    #[test]
+    fn cancellation_leaves_state_intact() {
+        let g = gen::erdos_renyi(60, 0.3, 7);
+        let mut dt = DynamicTruss::new(g, 2);
+        let before_t = dt.trussness().to_vec();
+        let before_m = dt.m();
+        let token = CancelToken::never();
+        token.cancel();
+        let err = dt.insert_batch_with(&[(0, 61), (1, 62)], &token).unwrap_err();
+        assert_eq!(err.reason, crate::par::CancelReason::Cancelled);
+        assert_eq!(dt.m(), before_m, "no partial mutation on cancel");
+        assert_eq!(dt.trussness(), &before_t[..]);
+    }
+
+    #[test]
+    fn corrupted_state_is_caught_by_validate() {
+        let g = gen::complete(5);
+        let mut dt = DynamicTruss::new(g, 1);
+        dt.insert_batch(&[(0, 5), (1, 5)]);
+        assert!(dt.validate_maintained().ok());
+        // corrupt the maintained trussness: the differential check must
+        // flag exactly this class of silent maintenance bug
+        dt.trussness[0] += 1;
+        let rep = dt.validate_maintained();
+        assert!(!rep.ok(), "corrupted trussness must be detected");
+        assert!(rep.error().unwrap().contains("dynamic.trussness"));
+        dt.trussness[0] -= 1;
+        // corrupt the maintained support: caught by the recount
+        dt.support[3] += 1;
+        let rep = dt.validate_maintained();
+        assert!(!rep.ok(), "corrupted support must be detected");
+    }
+
+    #[test]
+    fn update_metrics_and_report_fields() {
+        let before = obs::global()
+            .counter("dynamic_updates_total", &[("op", "insert")])
+            .get();
+        let g = gen::complete(4);
+        let mut dt = DynamicTruss::new(g, 1);
+        let r = dt.insert_batch(&[(0, 4), (1, 4)]);
+        assert_eq!(r.op, UpdateOp::Insert);
+        assert_eq!(r.requested, 2);
+        assert!(r.secs > 0.0);
+        assert!(r.affected >= 2, "inserted edges are always affected");
+        assert!(r.summary().contains("op=insert"), "{}", r.summary());
+        let after = obs::global()
+            .counter("dynamic_updates_total", &[("op", "insert")])
+            .get();
+        assert!(after >= before + 1);
+    }
+}

@@ -16,8 +16,13 @@
 //! - `dense` — XLA dense-block decomposition through the AOT
 //!   Pallas/JAX artifacts (the Graphulo-style linear-algebra sibling);
 //!   only built with the off-by-default `xla` cargo feature.
+//!
+//! [`DynamicTruss`] keeps a decomposition correct under batch edge
+//! insertions/deletions by re-peeling only the affected triangle-
+//! connected region (frozen-context region peel; see `dynamic`).
 
 mod cohen;
+mod dynamic;
 mod local;
 mod pkt;
 mod query;
@@ -28,6 +33,7 @@ pub mod dense;
 pub mod external;
 
 pub use cohen::cohen_ktruss;
+pub use dynamic::{DynamicTruss, UpdateOp, UpdateReport};
 pub use local::local;
 pub use pkt::{
     pkt, pkt_config, pkt_config_with, pkt_with_support, pkt_with_support_config,

@@ -192,9 +192,36 @@ pub fn pkt_with_support_config_with(
     let sp_peel = obs::span("pkt.peel");
     let threshold = cfg.compact_threshold.clamp(0.0, 1.0);
     let driven = if cfg.use_bitsets {
-        peel_driver::<AtomicBitset>(eg, pool, s, threshold, token)
+        peel_driver::<AtomicBitset>(eg, pool, s, threshold, token, None)
     } else {
-        peel_driver::<BoolFlags>(eg, pool, s, threshold, token)
+        peel_driver::<BoolFlags>(eg, pool, s, threshold, token, None)
+    };
+    let (trussness, mut stats) = driven?;
+    stats.total_secs = sp_peel.close();
+    Ok(TrussResult { trussness, stats })
+}
+
+/// Region re-peel for batch-dynamic maintenance
+/// ([`crate::truss::DynamicTruss`]): peel a sub-[`EdgeGraph`] in which
+/// some edges are *frozen* — their support is pinned at `trussness - 2`
+/// and [`decrement`] never touches it. Frozen edges still enter the
+/// frontier at their pinned level and still decrement their unfrozen
+/// triangle partners, so they replay exactly the influence they exert
+/// in a full peel without being recomputed themselves.
+pub(crate) fn pkt_region_peel(
+    eg: &EdgeGraph,
+    pool: &Pool,
+    s: Vec<AtomicI32>,
+    frozen: AtomicBitset,
+    cfg: &PktConfig,
+    token: &CancelToken,
+) -> Result<TrussResult, Cancelled> {
+    let sp_peel = obs::span("pkt.peel");
+    let threshold = cfg.compact_threshold.clamp(0.0, 1.0);
+    let driven = if cfg.use_bitsets {
+        peel_driver::<AtomicBitset>(eg, pool, s, threshold, token, Some(frozen))
+    } else {
+        peel_driver::<BoolFlags>(eg, pool, s, threshold, token, Some(frozen))
     };
     let (trussness, mut stats) = driven?;
     stats.total_secs = sp_peel.close();
@@ -274,6 +301,7 @@ fn peel_driver<F: FlagArray>(
     s: Vec<AtomicI32>,
     threshold: f64,
     token: &CancelToken,
+    frozen: Option<AtomicBitset>,
 ) -> Result<(Vec<u32>, PktStats), Cancelled> {
     let m_orig = eg.m();
     let shared = PeelShared {
@@ -295,6 +323,7 @@ fn peel_driver<F: FlagArray>(
     let mut cur_to_orig: Option<Vec<EdgeId>> = None;
     let mut owned: Option<EdgeGraph> = None;
     let mut s = s;
+    let mut frozen = frozen;
     let mut rebuilds = 0u32;
     let mut compact_secs = 0.0f64;
 
@@ -309,7 +338,17 @@ fn peel_driver<F: FlagArray>(
         let in_a = F::with_len(m);
         let in_b = F::with_len(m);
         run_stage(
-            cur, pool, &s, &processed, &in_a, &in_b, &shared, threshold, start_level, token,
+            cur,
+            pool,
+            &s,
+            &processed,
+            &in_a,
+            &in_b,
+            &shared,
+            threshold,
+            start_level,
+            token,
+            frozen.as_ref(),
         );
 
         if shared.todo.load(Ordering::Acquire) <= 0 {
@@ -359,6 +398,16 @@ fn peel_driver<F: FlagArray>(
             .iter()
             .map(|&o| AtomicI32::new(s[o as usize].load(Ordering::Relaxed)))
             .collect();
+        frozen = frozen.map(|old| {
+            // frozen bits ride the same old→new remap as the supports
+            let next = AtomicBitset::new(comp.old_of_new.len());
+            for (new, &o) in comp.old_of_new.iter().enumerate() {
+                if old.get(o as usize) {
+                    next.set(new);
+                }
+            }
+            next
+        });
         cur_to_orig = Some(match cur_to_orig {
             None => comp.old_of_new.clone(),
             Some(map) => comp.old_of_new.iter().map(|&o| map[o as usize]).collect(),
@@ -413,6 +462,7 @@ fn run_stage<F: FlagArray>(
     threshold: f64,
     start_level: i32,
     token: &CancelToken,
+    frozen: Option<&AtomicBitset>,
 ) {
     let n = eg.n();
     let m = eg.m();
@@ -479,6 +529,7 @@ fn run_stage<F: FlagArray>(
                         let e1 = cur_slice[i];
                         process_edge(
                             eg, g, e1, level, s, processed, cur_in, nxt_in, &mut w, &mut x,
+                            frozen,
                         );
                     });
                 }
@@ -579,6 +630,7 @@ fn process_edge<F: FlagArray>(
     in_next: &F,
     w_next: &mut BatchWriter<'_, EdgeId>,
     x: &mut [u32],
+    frozen: Option<&AtomicBitset>,
 ) {
     let (u, v) = eg.el[e1 as usize];
     // §Perf opt 1: mark the smaller-degree endpoint and scan the larger.
@@ -610,11 +662,11 @@ fn process_edge<F: FlagArray>(
         }
         // decrement S[e2] unless e3 (also in curr) owns the triangle
         if !in_curr.get(e3 as usize) || e1 < e3 {
-            decrement(e2, level, s, in_next, w_next);
+            decrement(e2, level, s, in_next, w_next, frozen);
         }
         // decrement S[e3] unless e2 (also in curr) owns the triangle
         if !in_curr.get(e2 as usize) || e1 < e2 {
-            decrement(e3, level, s, in_next, w_next);
+            decrement(e3, level, s, in_next, w_next, frozen);
         }
     }
     // unmark
@@ -626,6 +678,8 @@ fn process_edge<F: FlagArray>(
 /// Atomically decrement `S[e]` toward `level`, with the paper's
 /// overshoot correction (Alg. 5 lines 17–28): the thread that observes
 /// the `level+1 → level` transition appends `e` to the next frontier.
+/// A frozen edge (region re-peel context, pinned at its known
+/// trussness) is never decremented — the pin *is* its final level.
 #[inline]
 fn decrement<F: FlagArray>(
     e: EdgeId,
@@ -633,8 +687,12 @@ fn decrement<F: FlagArray>(
     s: &[AtomicI32],
     in_next: &F,
     w_next: &mut BatchWriter<'_, EdgeId>,
+    frozen: Option<&AtomicBitset>,
 ) {
     let ei = e as usize;
+    if frozen.is_some_and(|fz| fz.get(ei)) {
+        return;
+    }
     if s[ei].load(Ordering::Relaxed) > level {
         let old = s[ei].fetch_sub(1, Ordering::AcqRel);
         if old == level + 1 {

@@ -1,0 +1,61 @@
+//! Differential check for batch-dynamic truss maintenance: the
+//! maintained state of a [`crate::truss::DynamicTruss`] must equal what
+//! a from-scratch run computes on the same graph.
+//!
+//! Two comparisons, both exact:
+//!
+//! - the maintained per-edge *support* against a serial triangle
+//!   recount ([`check_support`] — incremental ±1 deltas drift silently
+//!   if a shared triangle is double-claimed);
+//! - the maintained per-edge *trussness* against a fresh PKT
+//!   decomposition with the same [`PktConfig`] — this is the oracle
+//!   that catches a wrong affected-region bound, a mis-pinned context
+//!   edge, or a stale write-back.
+//!
+//! Like every other check this is opt-in (a full recompute per batch is
+//! exactly the cost dynamic maintenance exists to avoid): it runs when
+//! [`crate::validate::enabled`] holds, and always through
+//! [`crate::truss::DynamicTruss::validate_maintained`].
+
+use super::results::check_support;
+use super::Report;
+use crate::graph::EdgeGraph;
+use crate::obs;
+use crate::par::Pool;
+use crate::truss::{pkt_config, PktConfig};
+
+/// Check maintained `support` and `trussness` for `eg` against a
+/// serial recount and a from-scratch decomposition.
+pub fn check_dynamic(
+    eg: &EdgeGraph,
+    support: &[u32],
+    trussness: &[u32],
+    pool: &Pool,
+    cfg: &PktConfig,
+    rep: &mut Report,
+) {
+    let sp = obs::span("validate.dynamic");
+    rep.checks_run += 1;
+    check_support(eg, support, rep);
+    if trussness.len() != eg.m() {
+        rep.fail(
+            "dynamic.trussness",
+            "trussness.len".into(),
+            format!("{} != m={}", trussness.len(), eg.m()),
+        );
+        sp.close();
+        return;
+    }
+    let fresh = pkt_config(eg, pool, cfg);
+    for (e, (&have, &want)) in trussness.iter().zip(fresh.trussness.iter()).enumerate() {
+        if have != want {
+            let (u, v) = eg.el[e];
+            rep.fail(
+                "dynamic.trussness",
+                format!("edge[{e}]=<{u},{v}>"),
+                format!("maintained {have} != recomputed {want}"),
+            );
+        }
+    }
+    sp.close();
+}

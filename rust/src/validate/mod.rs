@@ -18,7 +18,11 @@
 //!   recount;
 //! - [`check_trussness`] — output sanity: trussness ≥ 2, bounded by
 //!   initial support + 2 and by the k-core bound
-//!   `min(core(u), core(v)) + 1`.
+//!   `min(core(u), core(v)) + 1`;
+//! - [`check_dynamic`] — batch-dynamic maintenance differential: the
+//!   maintained support and trussness of a
+//!   [`crate::truss::DynamicTruss`] against a serial recount and a
+//!   from-scratch decomposition.
 //!
 //! Validation is opt-in (it adds serial re-derivation work): per job via
 //! `JobConfig::validate` / the `--validate` CLI flag / the server's
@@ -27,9 +31,11 @@
 //! in place. Each check runs under a `validate.*` obs span, and every
 //! violation increments the `validate_failures_total` counter.
 
+mod dynamic;
 mod results;
 mod structure;
 
+pub use dynamic::check_dynamic;
 pub use results::{check_support, check_trussness, recount_support};
 pub use structure::{check_compaction, check_edge_graph, check_graph};
 

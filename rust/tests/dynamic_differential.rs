@@ -1,0 +1,192 @@
+//! Differential-oracle battery for batch-dynamic truss maintenance.
+//!
+//! For a graph from **every** `gen/` family, drive a [`DynamicTruss`]
+//! through seeded random insert/delete batches and assert after every
+//! single batch that the maintained trussness equals a from-scratch PKT
+//! recompute on the same graph (edge ids align because both sides keep
+//! the lexicographic edge order). Batches are deliberately dirty — they
+//! contain duplicates, self-loops, already-present inserts and
+//! already-absent removes — and the whole matrix runs at batch sizes
+//! 1 / 8 / 256 across 1 / 2 / 4 threads.
+//!
+//! This is the test-tree face of `validate::check_dynamic`: the unit
+//! tests prove the machinery catches a corrupted state, this battery
+//! proves the maintenance never produces one.
+
+use trussx::gen;
+use trussx::graph::{Graph, Vertex};
+use trussx::par::Pool;
+use trussx::truss::{pkt, DynamicTruss};
+use trussx::util::{fnv1a, Rng};
+
+/// One representative per generator family (small enough that the
+/// oracle recompute after every batch stays cheap).
+fn families(seed: u64) -> Vec<(&'static str, Graph)> {
+    vec![
+        ("complete", gen::complete(7)),
+        ("ring", gen::ring(24)),
+        ("star", gen::star(16)),
+        ("path", gen::path(20)),
+        ("grid2d", gen::grid2d(5, 6)),
+        ("er", gen::erdos_renyi(40, 0.15, seed)),
+        ("ba", gen::barabasi_albert(40, 3, seed)),
+        ("ws", gen::watts_strogatz(36, 4, 0.2, seed)),
+        ("rmat", gen::rmat(48, 160, 0.57, 0.19, 0.19, seed)),
+        ("pp", gen::planted_partition(3, 10, 0.8, 0.05, seed)),
+    ]
+}
+
+/// A batch of `size` random pairs over a slightly-too-wide id range
+/// (some endpoints fall outside the current vertex set: new vertices on
+/// insert, guaranteed-absent edges on remove), plus guaranteed dirt —
+/// a self-loop and a duplicate — regardless of rng luck.
+fn random_batch(rng: &mut Rng, n: usize, size: usize) -> Vec<(Vertex, Vertex)> {
+    let span = n as u64 + 4;
+    let mut batch: Vec<(Vertex, Vertex)> = (0..size)
+        .map(|_| (rng.below(span) as Vertex, rng.below(span) as Vertex))
+        .collect();
+    batch.push((1, 1));
+    batch.push(batch[0]);
+    batch
+}
+
+/// The oracle: maintained trussness must equal a fresh decomposition.
+fn assert_oracle(dt: &DynamicTruss, pool: &Pool, fam: &str, step: usize) {
+    let want = pkt(dt.eg(), pool).trussness;
+    if dt.trussness() != &want[..] {
+        let diverging: Vec<String> = dt
+            .eg()
+            .el
+            .iter()
+            .enumerate()
+            .filter(|&(e, _)| dt.trussness()[e] != want[e])
+            .map(|(e, &(u, v))| {
+                format!("<{u},{v}>: maintained={} fresh={}", dt.trussness()[e], want[e])
+            })
+            .collect();
+        panic!(
+            "family={fam} step={step}: maintained trussness diverged on {} edge(s):\n{}",
+            diverging.len(),
+            diverging.join("\n")
+        );
+    }
+}
+
+/// Drive every family through `rounds` alternating update batches at
+/// one (threads, batch size) point of the matrix.
+fn drive(threads: usize, batch_size: usize, rounds: usize) {
+    let pool = Pool::new(threads);
+    let seed = fnv1a(b"dynamic-differential")
+        ^ (threads as u64) << 32
+        ^ (batch_size as u64);
+    for (fam, g) in families(seed) {
+        let mut rng = Rng::new(seed ^ fnv1a(fam.as_bytes()));
+        let mut dt = DynamicTruss::new(g, threads);
+        assert_oracle(&dt, &pool, fam, 0);
+        for step in 1..=rounds {
+            let batch = random_batch(&mut rng, dt.n(), batch_size);
+            if rng.chance(0.5) {
+                dt.insert_batch(&batch);
+            } else {
+                dt.remove_batch(&batch);
+            }
+            assert_oracle(&dt, &pool, fam, step);
+        }
+        // the deep check also recounts supports serially
+        let rep = dt.validate_maintained();
+        assert!(rep.ok(), "family={fam}: {}", rep.error().unwrap_or_default());
+    }
+}
+
+#[test]
+fn differential_threads1_batch1() {
+    drive(1, 1, 4);
+}
+
+#[test]
+fn differential_threads1_batch8() {
+    drive(1, 8, 4);
+}
+
+#[test]
+fn differential_threads1_batch256() {
+    drive(1, 256, 3);
+}
+
+#[test]
+fn differential_threads2_batch1() {
+    drive(2, 1, 4);
+}
+
+#[test]
+fn differential_threads2_batch8() {
+    drive(2, 8, 4);
+}
+
+#[test]
+fn differential_threads2_batch256() {
+    drive(2, 256, 3);
+}
+
+#[test]
+fn differential_threads4_batch1() {
+    drive(4, 1, 4);
+}
+
+#[test]
+fn differential_threads4_batch8() {
+    drive(4, 8, 4);
+}
+
+#[test]
+fn differential_threads4_batch256() {
+    drive(4, 256, 3);
+}
+
+#[test]
+fn differential_tear_down_and_rebuild() {
+    // remove every edge in two halves, then rebuild from empty: the
+    // maintenance must survive m → 0 and grow back to the exact start
+    let g = gen::planted_partition(2, 8, 0.9, 0.1, 11);
+    let pool = Pool::new(2);
+    let mut dt = DynamicTruss::new(g, 2);
+    let start = dt.trussness().to_vec();
+    let all = dt.eg().el.clone();
+    let half = all.len() / 2;
+    dt.remove_batch(&all[..half]);
+    assert_oracle(&dt, &pool, "teardown", 1);
+    dt.remove_batch(&all[half..]);
+    assert_eq!(dt.m(), 0);
+    dt.insert_batch(&all[half..]);
+    assert_oracle(&dt, &pool, "rebuild", 2);
+    dt.insert_batch(&all[..half]);
+    assert_oracle(&dt, &pool, "rebuild", 3);
+    assert_eq!(dt.trussness(), &start[..], "round trip must restore the start state");
+}
+
+#[test]
+fn differential_insert_remove_same_batch() {
+    // inserting a batch and removing the identical batch must be a
+    // no-op on trussness, for every family
+    for (fam, g) in families(0xABCD) {
+        let mut rng = Rng::new(fnv1a(fam.as_bytes()));
+        let pool = Pool::new(2);
+        let mut dt = DynamicTruss::new(g, 2);
+        let before = dt.trussness().to_vec();
+        let n = dt.n();
+        let batch: Vec<(Vertex, Vertex)> = (0..8)
+            .map(|_| (rng.below(n as u64) as Vertex, rng.below(n as u64) as Vertex))
+            .collect();
+        // only insert what was absent, then remove exactly that
+        let fresh: Vec<(Vertex, Vertex)> = batch
+            .iter()
+            .copied()
+            .filter(|&(u, v)| u != v && dt.eg().edge_id(u.min(v), u.max(v)).is_none())
+            .collect();
+        dt.insert_batch(&fresh);
+        assert_oracle(&dt, &pool, fam, 1);
+        dt.remove_batch(&fresh);
+        assert_oracle(&dt, &pool, fam, 2);
+        assert_eq!(dt.trussness(), &before[..], "family={fam}");
+    }
+}

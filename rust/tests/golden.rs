@@ -1,0 +1,157 @@
+//! Golden decompositions: small, hand-checkable fixtures whose exact
+//! per-edge trussness is locked down — both the full run and the state
+//! after dynamic updates. A regression anywhere in the support/peel/
+//! maintenance stack shows up here as a concrete edge with a concrete
+//! wrong number, not as a property-test shrink hunt.
+//!
+//! Fixture 1 — the paper's Figure 1 shape: two triangles joined by
+//! bridge edges. Every edge's trussness is checkable by eye (triangle
+//! edges are in one triangle each → 3; bridges close none → 2).
+//!
+//! Fixture 2 — a planted clique: K6 dangling off a path. The clique is
+//! a 6-truss (every edge has the 4 other clique vertices as common
+//! neighbors), everything else is triangle-free → 2.
+
+use trussx::graph::{EdgeGraph, GraphBuilder, Vertex};
+use trussx::par::Pool;
+use trussx::truss::{class_histogram, ktruss_components, pkt, wc, DynamicTruss};
+
+/// Assert the decomposition of `edges` equals `expect` edge-for-edge
+/// (expect is in lexicographic edge order, like `EdgeGraph::el`), under
+/// both the parallel (pkt) and the serial reference (wc) algorithms.
+fn assert_golden(edges: &[(Vertex, Vertex)], expect: &[((Vertex, Vertex), u32)]) {
+    let g = GraphBuilder::new().edges_vec(edges.to_vec()).build();
+    let eg = EdgeGraph::new(g);
+    assert_eq!(eg.m(), expect.len(), "fixture edge count");
+    for res in [pkt(&eg, &Pool::new(2)).trussness, wc(&eg).trussness] {
+        for (e, &(uv, want)) in expect.iter().enumerate() {
+            assert_eq!(eg.el[e], uv, "edge order drifted at id {e}");
+            assert_eq!(
+                res[e], want,
+                "edge <{},{}> has trussness {} (golden: {want})",
+                uv.0, uv.1, res[e]
+            );
+        }
+    }
+}
+
+/// Figure 1 shape: triangles {0,1,2} and {3,4,5}, bridges (2,3), (0,4).
+fn figure1_edges() -> Vec<(Vertex, Vertex)> {
+    vec![(0, 1), (0, 2), (1, 2), (3, 4), (3, 5), (4, 5), (2, 3), (0, 4)]
+}
+
+#[test]
+fn golden_figure1_full() {
+    assert_golden(
+        &figure1_edges(),
+        &[
+            ((0, 1), 3),
+            ((0, 2), 3),
+            ((0, 4), 2),
+            ((1, 2), 3),
+            ((2, 3), 2),
+            ((3, 4), 3),
+            ((3, 5), 3),
+            ((4, 5), 3),
+        ],
+    );
+    // structure: exactly two 3-truss components (the two triangles),
+    // one connected 2-truss (everything), no 4-truss
+    let g = GraphBuilder::new().edges_vec(figure1_edges()).build();
+    let eg = EdgeGraph::new(g);
+    let t = pkt(&eg, &Pool::new(1)).trussness;
+    assert_eq!(class_histogram(&t), vec![0, 0, 2, 6]);
+    assert_eq!(ktruss_components(&eg, &t, 3).len(), 2);
+    assert_eq!(ktruss_components(&eg, &t, 2).len(), 1);
+    assert!(ktruss_components(&eg, &t, 4).is_empty());
+}
+
+#[test]
+fn golden_figure1_after_updates() {
+    let g = GraphBuilder::new().edges_vec(figure1_edges()).build();
+    let mut dt = DynamicTruss::new(g, 2);
+
+    // insert (2,4): closes triangles {0,2,4} and {2,3,4}, welding the
+    // two triangles into one component where every edge sits in at
+    // least one triangle → the whole graph becomes a single 3-truss
+    let r = dt.insert_batch(&[(2, 4)]);
+    assert_eq!((r.applied, r.t_max, r.m), (1, 3, 9));
+    let expect3: &[((Vertex, Vertex), u32)] = &[
+        ((0, 1), 3),
+        ((0, 2), 3),
+        ((0, 4), 3),
+        ((1, 2), 3),
+        ((2, 3), 3),
+        ((2, 4), 3),
+        ((3, 4), 3),
+        ((3, 5), 3),
+        ((4, 5), 3),
+    ];
+    for (e, &(uv, want)) in expect3.iter().enumerate() {
+        assert_eq!(dt.eg().el[e], uv);
+        assert_eq!(dt.trussness()[e], want, "edge <{},{}>", uv.0, uv.1);
+    }
+
+    // remove the two shared spines (0,2) and (3,4): every remaining
+    // triangle loses an edge, so the graph is triangle-free → all 2
+    let r = dt.remove_batch(&[(0, 2), (3, 4)]);
+    assert_eq!((r.applied, r.t_max, r.m), (2, 2, 7));
+    assert!(dt.trussness().iter().all(|&t| t == 2), "{:?}", dt.trussness());
+    assert!(dt.validate_maintained().ok());
+}
+
+/// Planted clique: K6 on 0..=5, path on 6..=15, connector (5,6).
+fn planted_clique_edges() -> Vec<(Vertex, Vertex)> {
+    let mut edges = vec![];
+    for u in 0..6u32 {
+        for v in (u + 1)..6 {
+            edges.push((u, v));
+        }
+    }
+    for i in 6..15u32 {
+        edges.push((i, i + 1));
+    }
+    edges.push((5, 6));
+    edges
+}
+
+#[test]
+fn golden_planted_clique_full() {
+    let g = GraphBuilder::new().edges_vec(planted_clique_edges()).build();
+    let eg = EdgeGraph::new(g);
+    for t in [pkt(&eg, &Pool::new(2)).trussness, wc(&eg).trussness] {
+        // 15 clique edges at 6, the 9 path edges + connector at 2
+        assert_eq!(class_histogram(&t), vec![0, 0, 10, 0, 0, 0, 15]);
+        for (e, &(u, v)) in eg.el.iter().enumerate() {
+            let want = if v < 6 { 6 } else { 2 };
+            assert_eq!(t[e], want, "edge <{u},{v}>");
+        }
+    }
+    let t = pkt(&eg, &Pool::new(2)).trussness;
+    // the 6-truss is exactly the planted clique, one component
+    let comps = ktruss_components(&eg, &t, 6);
+    assert_eq!(comps.len(), 1);
+    assert_eq!(comps[0].len(), 15);
+}
+
+#[test]
+fn golden_planted_clique_after_updates() {
+    let g = GraphBuilder::new().edges_vec(planted_clique_edges()).build();
+    let mut dt = DynamicTruss::new(g, 2);
+
+    // remove one clique edge: K6 minus an edge is a 5-truss (edges at
+    // the gap keep 3 common neighbors, inner edges keep 4), path stays 2
+    let r = dt.remove_batch(&[(0, 1)]);
+    assert_eq!((r.applied, r.t_max), (1, 5));
+    assert_eq!(class_histogram(dt.trussness()), vec![0, 0, 10, 0, 0, 14]);
+
+    // reinsert it: the exact full-graph golden state must come back
+    let r = dt.insert_batch(&[(0, 1)]);
+    assert_eq!((r.applied, r.t_max), (1, 6));
+    assert_eq!(class_histogram(dt.trussness()), vec![0, 0, 10, 0, 0, 0, 15]);
+    for (e, &(u, v)) in dt.eg().el.iter().enumerate() {
+        let want = if v < 6 { 6 } else { 2 };
+        assert_eq!(dt.trussness()[e], want, "edge <{u},{v}>");
+    }
+    assert!(dt.validate_maintained().ok());
+}
